@@ -1,0 +1,81 @@
+"""Theorem 2 benchmark: actual coded bits vs the bound, and the
+communication-savings table (Fig. 3's Total column analogue + App. I
+trade-off): bytes per exchanged dual vector for FP32 / UQ8 / UQ4 /
+entropy-coded."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import coding
+from repro.core.adaptive_levels import (
+    normalized_coord_histogram,
+    optimize_levels,
+    symbol_probabilities,
+)
+from repro.core.quantization import (
+    QuantConfig,
+    bucket_norms,
+    quantize,
+    uniform_levels,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    d = 1 << 16
+    v = jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)
+    fp32_bits = 32 * d
+
+    for s, bits in ((15, 8), (5, 4)):
+        cfg = QuantConfig(num_levels=s, q_norm=math.inf, bucket_size=1024, bits=bits)
+        v2d = v.reshape(-1, 1024)
+        hist = normalized_coord_histogram(v2d, bucket_norms(v2d, math.inf))
+        levels = optimize_levels(uniform_levels(s), hist)
+        qt = quantize(v, levels, KEY, cfg)
+        fixed_bits = qt.wire_bytes() * 8
+
+        p = np.asarray(symbol_probabilities(levels, hist), np.float64)
+        p = np.maximum(p, 1e-12)
+        p = p / p.sum()
+        bound = coding.theorem2_expected_bits(p, d, num_buckets=qt.norms.size)
+
+        signed_idx = (
+            np.asarray(qt.payload, np.int64)
+            if bits == 8
+            else np.asarray(
+                jnp.sign(jnp.asarray(0)), np.int64
+            )
+        )
+        if bits == 4:
+            from repro.core.quantization import unpack_int4
+
+            signed_idx = np.asarray(unpack_int4(qt.payload), np.int64)
+        codes = coding.huffman_code(list(p))
+        import time as _t
+
+        t0 = _t.perf_counter()
+        _, huff_bits = coding.encode(signed_idx, np.asarray(qt.norms),
+                                     method="huffman", codes=codes)
+        enc_us = (_t.perf_counter() - t0) * 1e6
+        _, elias_bits = coding.encode(signed_idx, np.asarray(qt.norms),
+                                      method="elias")
+
+        emit(
+            f"thm2_codelength_s{s}_uq{bits}",
+            enc_us,
+            (
+                f"fp32={fp32_bits};fixed_int{bits}={fixed_bits};"
+                f"huffman={huff_bits};elias={elias_bits};bound={bound:.0f};"
+                f"holds={huff_bits <= bound * 1.02};"
+                f"saving_vs_fp32={fp32_bits / huff_bits:.2f}x"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

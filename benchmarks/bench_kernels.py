@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode) vs jnp reference for
+quantize/dequantize, plus derived wire-bytes per compression setting.
+
+NOTE: on this CPU container the Pallas numbers measure the *interpret mode*
+(Python-level) path and are NOT representative of TPU throughput — the jnp
+reference timing is the CPU-meaningful number; the Pallas column proves the
+kernel contract at the same shapes.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.quantization import QuantConfig, uniform_levels
+from repro.kernels.dequantize import dequantize_blocks
+from repro.kernels.quantize import quantize_blocks
+from repro.kernels.ref import dequantize_blocks_ref, quantize_blocks_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    s = 15
+    levels = uniform_levels(s)
+    for nb, bucket in ((16, 1024), (64, 1024)):
+        x = jax.random.normal(KEY, (nb, bucket), jnp.float32)
+        noise = jax.random.uniform(jax.random.PRNGKey(1), (nb, bucket))
+        n = nb * bucket
+
+        ref_q = jax.jit(lambda a, r: quantize_blocks_ref(a, r, levels, q_is_inf=True))
+        us = time_fn(ref_q, x, noise, iters=5)
+        emit(f"quantize_ref_jnp_{n}", us, f"GBps={(n*4/us*1e6)/1e9:.2f}")
+
+        pl_q = lambda a, r: quantize_blocks(
+            a, r, levels, num_symbols=s + 2, q_is_inf=True
+        )
+        us = time_fn(pl_q, x, noise, iters=3)
+        emit(f"quantize_pallas_interp_{n}", us, "interpret-mode;contract-only")
+
+        idx, norms = ref_q(x, noise)
+        ref_d = jax.jit(lambda i, m: dequantize_blocks_ref(i, m, levels))
+        us = time_fn(ref_d, idx, norms, iters=5)
+        emit(f"dequantize_ref_jnp_{n}", us, f"GBps={(n*4/us*1e6)/1e9:.2f}")
+
+        pl_d = lambda i, m: dequantize_blocks(i, m, levels, num_symbols=s + 2)
+        us = time_fn(pl_d, idx, norms, iters=3)
+        emit(f"dequantize_pallas_interp_{n}", us, "interpret-mode;contract-only")
+
+    # fused dequant+mean (exchange consumer) vs unfused pipeline
+    import numpy as _np
+    from repro.kernels.dequant_reduce import dequant_reduce_blocks, dequant_reduce_ref
+
+    K, nb, bucket = 8, 16, 1024
+    rng = _np.random.RandomState(0)
+    idxs = jnp.asarray(rng.randint(-16, 17, size=(K, nb, bucket)), jnp.int8)
+    nrm = jnp.asarray(_np.abs(rng.randn(K, nb)) + 0.1, jnp.float32)
+    fused = lambda a, b: dequant_reduce_blocks(a, b, levels, num_symbols=17, num_workers=K)
+    us = time_fn(fused, idxs, nrm, iters=3)
+    n = nb * bucket
+    emit(f"dequant_reduce_pallas_interp_K{K}_{n}",
+         us, f"hbm_model={(K*n+4*n)/((2*K+1)*4*n):.2f}x_of_unfused")
+    us = time_fn(jax.jit(lambda a, b: dequant_reduce_ref(a, b, levels)), idxs, nrm, iters=5)
+    emit(f"dequant_reduce_ref_jnp_K{K}_{n}", us, "")
+
+    # derived wire bytes per setting (App. I trade-off inputs)
+    from repro.core.compressed_collectives import wire_bytes_per_device
+
+    n = 1 << 20
+    for tag, cfg in (
+        ("fp32", None),
+        ("uq8", QuantConfig(num_levels=15, bits=8, bucket_size=1024)),
+        ("uq4", QuantConfig(num_levels=5, bits=4, bucket_size=1024)),
+    ):
+        for K in (3, 16, 512):
+            b = wire_bytes_per_device(n, K, cfg, mode="two_phase")
+            emit(f"wire_bytes_{tag}_K{K}", 0.0, f"bytes={b:.3e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Theorem 1 benchmark: empirical quantization variance vs the analytic
+bound, across dimension d, level count s, and L^q normalization.
+
+Paper artifact: Theorem 1 (variance bound) + the claim that adaptive levels
+make eps_Q ~ O(l1 sqrt(d)), arbitrarily smaller than QSGD's O(sqrt(d)/s)
+and NUQSGD's O(2^-s sqrt(d)).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.adaptive_levels import normalized_coord_histogram, optimize_levels
+from repro.core.quantization import (
+    QuantConfig,
+    bucket_norms,
+    empirical_variance_multiplier,
+    exponential_levels,
+    quantize_dequantize,
+    theorem1_epsilon_q,
+    uniform_levels,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    rows = []
+    for d in (256, 1024, 4096):
+        for s, q in ((3, 2.0), (7, 2.0), (15, 2.0), (7, math.inf)):
+            cfg = QuantConfig(num_levels=s, q_norm=q, bucket_size=d)
+            v = jnp.asarray(np.random.RandomState(0).randn(d), jnp.float32)
+            v2d = v.reshape(1, d)
+            hist = normalized_coord_histogram(v2d, bucket_norms(v2d, q))
+            for name, levels in (
+                ("uniform", uniform_levels(s)),
+                ("exponential", exponential_levels(s)),
+                ("qada", optimize_levels(uniform_levels(s), hist)),
+            ):
+                emp = empirical_variance_multiplier(v, levels, cfg, KEY, trials=32)
+                bound = theorem1_epsilon_q(np.asarray(levels), d, q)
+                qdq = jax.jit(lambda vv, k, lv=levels: quantize_dequantize(vv, lv, k, cfg))
+                us = time_fn(qdq, v, KEY, warmup=1, iters=5)
+                qn = "inf" if math.isinf(q) else int(q)
+                emit(
+                    f"thm1_variance_d{d}_s{s}_L{qn}_{name}",
+                    us,
+                    f"empirical={emp:.4f};bound={bound:.4f};holds={emp <= bound * 1.05}",
+                )
+                rows.append((d, s, name, emp, bound))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json artifacts.
+
+Usage: PYTHONPATH=src:. python benchmarks/make_experiments_tables.py
+Prints markdown to stdout (paste/refresh into EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import load_reports, markdown_table, roofline_row
+
+
+def dryrun_table(reps) -> str:
+    hdr = ("| arch | shape | mesh | mode | status | compile (s) | "
+           "peak GiB/dev | HLO flops/dev | HLO bytes/dev | coll wire B/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in reps:
+        if r.get("status") == "ok":
+            mem = (r["memory"]["peak_bytes"] or 0) / 2**30
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} | ok "
+                f"| {r['compile_seconds']} | {mem:.2f} "
+                f"| {r['cost']['flops']:.3e} | {r['cost']['bytes']:.3e} "
+                f"| {r['collectives']['total_wire_bytes']:.3e} |"
+            )
+        elif r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | SKIP "
+                f"| - | - | - | - | {r.get('reason','')[:60]} |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                f"| {r.get('mode','?')} | **ERROR** | - | - | - | - "
+                f"| {r.get('error','')[:60]} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    reps = load_reports()
+    print("### §Dry-run records\n")
+    print(dryrun_table(reps))
+    print("\n### §Roofline table\n")
+    rows = [x for x in (roofline_row(r) for r in reps) if x]
+    print(markdown_table(rows))
+    # bottleneck summary
+    from collections import Counter
+
+    doms = Counter(r["dominant"] for r in rows)
+    print(f"\nDominant-term distribution: {dict(doms)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Re-run the HLO analyzer over saved experiments/dryrun/hlo/*.hlo.zst and
+patch the matching JSON artifacts (no recompiles — the analyzer improves
+faster than compiles are cheap on this 1-core box).
+
+Usage: PYTHONPATH=src:. python benchmarks/reanalyze.py
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+ART = os.path.join(os.path.dirname(__file__), "../experiments/dryrun")
+
+
+def main():
+    n = 0
+    for hf in sorted(glob.glob(os.path.join(ART, "hlo", "*.hlo.zst"))):
+        base = os.path.basename(hf)[: -len(".hlo.zst")]
+        parts = base.split("__")
+        arch, shape, meshshape, mode = parts[:4]
+        tag = parts[4] if len(parts) > 4 else ""
+        mesh_kind = "multi" if meshshape.count("x") == 2 else "single"
+        jname = f"{arch}__{shape}__{mesh_kind}__{mode}"
+        if tag:
+            jname += f"__{tag}"
+        jf = os.path.join(ART, jname + ".json")
+        if not os.path.exists(jf):
+            continue
+        with open(jf) as f:
+            rep = json.load(f)
+        if rep.get("status") != "ok":
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(
+            open(hf, "rb").read(), max_output_size=1 << 31
+        ).decode()
+        a = analyze_hlo(hlo)
+        rep["cost"]["flops"] = a["flops"]
+        rep["cost"]["bytes"] = a["bytes"]
+        rep["collectives"] = {
+            k: a[k]
+            for k in (
+                "payload_bytes_by_kind", "wire_bytes_by_kind", "count_by_kind",
+                "total_payload_bytes", "total_wire_bytes",
+            )
+        }
+        with open(jf, "w") as f:
+            json.dump(rep, f, indent=1)
+        n += 1
+        print(f"[reanalyze] {base}: flops={a['flops']:.3e} bytes={a['bytes']:.3e} "
+              f"wire={a['total_wire_bytes']:.3e}", flush=True)
+    print(f"[reanalyze] patched {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Reads experiments/dryrun/*.json and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bandwidth
+  collective term = collective_wire_bytes_per_device / ICI_bandwidth
+
+(the dry-run artifacts are per-device quantities — the SPMD module is the
+per-chip program), the dominant term, MODEL_FLOPS = 6*N*D (6*N_active*D for
+MoE), and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (~100 GB/s/chip effective over 2 links used concurrently — we report
+with the conservative single-link 50 GB/s figure, per the assignment).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link (conservative)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../experiments/dryrun")
+
+SHAPE_TOKENS = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+                "decode_32k": (1, 128), "long_500k": (1, 1)}
+
+
+def model_flops(rep: dict) -> float:
+    """6*N(_active)*tokens global; 2*N*tokens for pure inference shapes."""
+    seq, batch = SHAPE_TOKENS[rep["shape"]]
+    tokens = seq * batch
+    n = rep.get("active_param_count") or rep.get("param_count")
+    mult = 6.0 if rep["shape"] == "train_4k" else 2.0
+    if rep["shape"] == "train_4k":
+        mult *= 2  # ExtraAdam: two oracle (fwd+bwd) evaluations per step
+    return mult * n * tokens
+
+
+def load_reports(pattern: str = "*.json") -> list[dict]:
+    reps = []
+    for f in sorted(glob.glob(os.path.join(ARTIFACT_DIR, pattern))):
+        with open(f) as fh:
+            reps.append(json.load(fh))
+    return reps
+
+
+def roofline_row(rep: dict) -> dict | None:
+    if rep.get("status") != "ok":
+        return None
+    n_dev = rep["num_devices"]
+    flops_dev = rep["cost"]["flops"]
+    bytes_dev = rep["cost"]["bytes"]
+    wire_dev = rep["collectives"]["total_wire_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = wire_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rep)
+    useful = mf / (flops_dev * n_dev) if flops_dev else 0.0
+    # fraction of roofline: compute time over the bound set by the dominant
+    frac = t_compute / max(max(terms.values()), 1e-12)
+    return {
+        "arch": rep["arch"],
+        "shape": rep["shape"],
+        "mesh": rep["mesh"],
+        "mode": rep.get("mode", "baseline"),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_global": flops_dev * n_dev,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+    }
+
+
+def run():
+    rows = [r for r in (roofline_row(rep) for rep in load_reports()) if r]
+    for r in rows:
+        print(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_{r['mode']},0.0,"
+            f"compute={r['t_compute_s']:.3e}s;memory={r['t_memory_s']:.3e}s;"
+            f"collective={r['t_collective_s']:.3e}s;dominant={r['dominant']};"
+            f"useful={r['useful_ratio']:.2f};frac={r['roofline_fraction']:.3f}",
+            flush=True,
+        )
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | mode | compute (s) | memory (s) | "
+           "collective (s) | dominant | useful | roofline frac |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Sections:
+  thm1_*      — Theorem 1 variance bound (bench_variance)
+  thm2_*      — Theorem 2 code length (bench_codelength)
+  thm3/4_*    — convergence rates + K-scaling (bench_convergence)
+  fig1_*      — WGAN-GP FP32/UQ8/UQ4 protocol (bench_gan)
+  fig4_*      — Q-GenX vs QSGDA (bench_convergence)
+  quantize_*  — kernel micro-benchmarks (bench_kernels)
+  roofline_*  — dry-run derived roofline terms (roofline; requires
+                experiments/dryrun artifacts)
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated section names")
+    ap.add_argument("--gan-steps", type=int, default=150)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_codelength,
+        bench_convergence,
+        bench_gan,
+        bench_kernels,
+        bench_variance,
+        roofline,
+    )
+
+    sections = {
+        "variance": bench_variance.run,
+        "codelength": bench_codelength.run,
+        "convergence": bench_convergence.run,
+        "kernels": bench_kernels.run,
+        "gan": lambda: bench_gan.run(steps=args.gan_steps),
+        "roofline": roofline.run,
+    }
+    selected = args.only.split(",") if args.only else list(sections)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        try:
+            sections[name]()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example: prefill + greedy decode with KV cache across
+three architecture families (dense MQA, SSM, MoE+MLA reduced variants).
+
+Run: PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ("gemma-2b", "mamba2-2.7b", "deepseek-v2-236b"):
+        print(f"\n=== {arch} (reduced) ===")
+        serve.main([
+            "--arch", arch, "--reduced",
+            "--batch", "4", "--prompt-len", "12", "--gen", "12",
+        ])
+
+
+if __name__ == "__main__":
+    main()

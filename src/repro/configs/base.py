@@ -1,0 +1,219 @@
+"""Model / shape / run configuration schema.
+
+Every assigned architecture provides a ``CONFIG: ModelConfig`` in its module
+under ``repro/configs/``; ``repro.configs.registry`` maps ``--arch`` ids to
+them.  ``ModelConfig.reduced()`` yields the CPU smoke-test variant
+(<=2 layers, d_model <= 512, <= 4 experts) of the same family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0  # 0 = full attention
+    global_every: int = 0  # every Nth layer is global (rest windowed); 0 = n/a
+    chunked_window: bool = False  # llama4-style chunk-local (no lookback)
+    # mlp
+    d_ff: int = 0
+    mlp_type: str = "swiglu"  # swiglu | geglu | gelu
+    # moe
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_every: int = 1  # layer i is MoE iff i % moe_every == moe_every-1
+    # (llama4 interleaves dense & MoE layers: moe_every=2)
+    # mla (deepseek)
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # frontend stub emits [B, encoder_seq, d_model]
+    # vlm / early fusion stub
+    num_prefix_embeds: int = 0  # image/audio embeddings fused at the prefix
+    # misc
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    remat: bool = False  # activation checkpointing on the layer scan body
+    blockwise_attn: bool = False  # flash-style online-softmax attention for
+    # long sequences (beyond-paper perf feature; see EXPERIMENTS.md §Perf)
+    onehot_embed: bool = False  # one-hot matmul embedding (gather-free;
+    # needed inside shard_map manual submeshes where XLA's gather
+    # partitioner CHECK-fails — see launch/dryrun.py qgenx mode)
+    citation: str = ""
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic path available (long_500k eligibility)."""
+        if self.arch_type in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0 or self.chunked_window
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        D, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        n = self.vocab_size * D  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * D
+        per_layer = 0
+        if self.arch_type != "ssm":
+            if self.kv_lora_rank:  # MLA
+                qd = self.qk_nope_dim + self.qk_rope_dim
+                per_layer += D * self.num_heads * qd  # q
+                per_layer += D * (self.kv_lora_rank + self.qk_rope_dim)  # down
+                per_layer += self.kv_lora_rank * self.num_heads * (
+                    self.qk_nope_dim + hd
+                )  # up k/v
+                per_layer += self.num_heads * hd * D  # o
+            elif self.num_heads:
+                per_layer += D * self.num_heads * hd  # q
+                per_layer += 2 * D * self.num_kv_heads * hd  # k, v
+                per_layer += self.num_heads * hd * D  # o
+        if self.arch_type in ("ssm", "hybrid"):
+            di = self.ssm_d_inner
+            per_layer += D * (2 * di + 2 * self.ssm_groups * self.ssm_state + self.ssm_num_heads)
+            per_layer += di * D  # out proj
+        n += L * per_layer
+        gate_mult = 2 if self.mlp_type in ("swiglu", "geglu") else 1
+        if self.num_experts:
+            n_moe_layers = L // self.moe_every
+            moe_per = D * self.num_experts  # router
+            moe_per += self.num_experts * (gate_mult + 1) * D * self.moe_d_ff
+            moe_per += self.num_shared_experts * (gate_mult + 1) * D * self.moe_d_ff
+            n += n_moe_layers * moe_per
+            if self.d_ff:  # interleaved dense layers
+                n += (L - n_moe_layers) * (gate_mult + 1) * D * self.d_ff
+        elif self.d_ff:
+            n += L * (gate_mult + 1) * D * self.d_ff
+        if self.encoder_layers:  # whisper encoder (self-attn + mlp) + cross-attn in decoder
+            enc_per = 4 * D * D + 3 * D * self.d_ff
+            n += self.encoder_layers * enc_per
+            n += L * 4 * D * D  # decoder cross-attention
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if not self.num_experts:
+            return self.param_count()
+        full = self.param_count()
+        gate_mult = 2 if self.mlp_type in ("swiglu", "geglu") else 1
+        n_moe_layers = self.num_layers // self.moe_every
+        all_experts = n_moe_layers * self.num_experts * (gate_mult + 1) * self.d_model * self.moe_d_ff
+        active_experts = (
+            n_moe_layers
+            * self.num_experts_per_tok
+            * (gate_mult + 1)
+            * self.d_model
+            * self.moe_d_ff
+        )
+        return full - all_experts + active_experts
+
+    # -- smoke-test variant --------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Same family, tiny: <=2 layers, d_model<=512, <=4 experts."""
+        hd = min(self.resolved_head_dim, 64)
+        nh = max(2, min(self.num_heads, 4)) if self.num_heads else 0
+        nkv = 0
+        if self.num_kv_heads:
+            nkv = 1 if self.num_kv_heads == 1 else 2
+        d_model = min(self.d_model, 256)
+        # keep d_model divisible by heads for the non-overridden case
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=d_model,
+            vocab_size=min(self.vocab_size, 512),
+            num_heads=nh,
+            num_kv_heads=nkv,
+            head_dim=hd if self.num_heads else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            num_experts_per_tok=min(self.num_experts_per_tok, 2)
+            if self.num_experts_per_tok
+            else 0,
+            num_shared_experts=min(self.num_shared_experts, 1),
+            moe_d_ff=min(self.moe_d_ff, 128) if self.moe_d_ff else 0,
+            kv_lora_rank=min(self.kv_lora_rank, 32),
+            qk_rope_dim=min(self.qk_rope_dim, 16),
+            qk_nope_dim=min(self.qk_nope_dim, 32),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=min(self.ssm_head_dim, 32),
+            ssm_chunk=64,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 64),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            num_prefix_embeds=min(self.num_prefix_embeds, 8),
+            dtype="float32",
+        )

@@ -1,0 +1,30 @@
+"""deepseek-v2-236b [moe]: 60L d_model=5120 128H d_ff=1536(expert)
+vocab=102400, MoE 160e top-6, MLA kv_lora=512, 2 shared experts.
+[arXiv:2405.04434]
+
+Deviation noted in DESIGN.md: the released model uses a dense FFN in layer
+0; we keep all 60 layers MoE for a homogeneous scan stack.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    arch_type="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,        # MLA: effectively MHA over the latent cache
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    head_dim=128,
+    num_experts=160,
+    num_experts_per_tok=6,
+    num_shared_experts=2,
+    moe_d_ff=1536,
+    mlp_type="swiglu",
+    vocab_size=102400,
+    tie_embeddings=False,
+    citation="arXiv:2405.04434",
+)

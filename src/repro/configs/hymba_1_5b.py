@@ -1,0 +1,29 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attn+mamba heads. [arXiv:2411.13676]
+
+Hymba uses sliding-window attention on most layers with 3 full-attention
+layers; we express that as window=1024 with a global layer every 8 (4 globals over 32 layers; the
+released model uses 3), which also qualifies the arch for long_500k.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    sliding_window=1024,
+    global_every=8,
+    d_ff=5504,
+    mlp_type="swiglu",
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    tie_embeddings=True,
+    citation="arXiv:2411.13676",
+)

@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 (attn-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality). [arXiv:2405.21060]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    arch_type="ssm",
+    num_layers=64,
+    d_model=2560,
+    d_ff=0,                  # attn-free, MLP-free (mamba block only)
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    citation="arXiv:2405.21060",
+)

@@ -1,0 +1,29 @@
+"""--arch id -> ModelConfig registry."""
+
+from repro.configs.base import ModelConfig
+
+
+def _load(mod: str) -> ModelConfig:
+    import importlib
+
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+ARCHS = {
+    "whisper-small": "whisper_small",
+    "qwen3-4b": "qwen3_4b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "hymba-1.5b": "hymba_1_5b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "gemma3-27b": "gemma3_27b",
+    "internvl2-26b": "internvl2_26b",
+    "gemma-2b": "gemma_2b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return _load(ARCHS[arch])

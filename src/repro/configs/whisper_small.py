@@ -1,0 +1,21 @@
+"""whisper-small [audio]: 12L d_model=768 12H (GQA kv=12) d_ff=3072
+vocab=51865 — enc-dec, conv frontend STUB. [arXiv:2212.04356]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    arch_type="audio",
+    num_layers=12,           # decoder layers
+    encoder_layers=12,
+    encoder_seq=1500,        # frontend stub: 30 s audio -> 1500 frames
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    mlp_type="gelu",
+    vocab_size=51865,
+    norm_type="layernorm",
+    tie_embeddings=True,
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,30 @@
+"""Core contribution of the paper: quantized generalized extra-gradient.
+
+Subpackage layout:
+  quantization.py   — unbiased random quantization Q_ell (Definition 1)
+  adaptive_levels.py — QAda level optimization (Section 3.3)
+  coding.py         — entropy coding + Theorem 2 accounting (App. K)
+  extragradient.py  — Q-GenX update rule + DA/DE/OptDA variants
+  vi.py             — monotone VI test problems + noise oracles
+  compressed_collectives.py — quantized all-reduce under shard_map
+"""
+
+from repro.core.quantization import (  # noqa: F401
+    QuantConfig,
+    Quantized,
+    quantize,
+    dequantize,
+    quantize_dequantize,
+    quantize_pytree,
+    dequantize_pytree,
+    quantize_dequantize_pytree,
+    uniform_levels,
+    exponential_levels,
+    theorem1_epsilon_q,
+)
+from repro.core.adaptive_levels import (  # noqa: F401
+    normalized_coord_histogram,
+    optimize_levels,
+    expected_variance,
+    symbol_probabilities,
+)

@@ -1,0 +1,173 @@
+r"""QAda — adaptive quantization level optimization (Section 3.3).
+
+Levels are chosen to minimize the expected quantization variance
+
+    min_{l in L}  sum_i  \int_{l_i}^{l_{i+1}} sigma_Q^2(u; l) dF~(u),
+    sigma_Q^2(u; l) = (l_{tau(u)+1} - u)(u - l_{tau(u)}),
+
+where F~ is the weighted empirical CDF of the normalized coordinates
+(weights lambda_j proportional to ||g_j||_q^2, per QAda in the paper).
+
+Implementation: the empirical distribution is summarized by a fixed-size
+weighted histogram (sufficient statistics — what Algorithm 1 line 4
+computes), then interior levels are optimized by coordinate descent.  The
+stationarity condition for level l_j between fixed neighbours is
+
+    sum_{u in (l_{j-1}, l_j)} w (u - l_{j-1})  =  sum_{u in (l_j, l_{j+1})} w (l_{j+1} - u)
+
+whose LHS-RHS is monotone increasing in l_j, so each coordinate update is a
+bisection on the cumulative histogram (W(x) = sum w 1{u<=x}, S(x) = sum w u).
+This mirrors the "updating levels one at a time" scheme of the paper
+(Faghri et al. 2020 lineage) and is jittable.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DEFAULT_BINS = 2048
+
+
+def normalized_coord_histogram(
+    v2d: Array, norms: Array, bins: int = DEFAULT_BINS
+) -> Array:
+    """Weighted histogram of u = |v|/norm with weights norm^2 (QAda's lambda).
+
+    v2d: [nb, bucket], norms: [nb]. Returns hist [bins] over [0, 1].
+    """
+    safe = jnp.where(norms > 0, norms, 1.0)
+    u = jnp.abs(v2d.astype(jnp.float32)) / safe[:, None]
+    u = jnp.clip(u, 0.0, 1.0)
+    w = jnp.broadcast_to((norms**2)[:, None], u.shape)
+    idx = jnp.clip((u * bins).astype(jnp.int32), 0, bins - 1)
+    hist = jnp.zeros((bins,), jnp.float32).at[idx.reshape(-1)].add(w.reshape(-1))
+    return hist
+
+
+def merge_histograms(*hists: Array) -> Array:
+    """Sufficient statistics merge across oracle samples / workers."""
+    return sum(hists)
+
+
+def _cumulatives(hist: Array):
+    """W(x), S(x) evaluated at bin edges (x = k/bins)."""
+    bins = hist.shape[0]
+    centers = (jnp.arange(bins, dtype=jnp.float32) + 0.5) / bins
+    W = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(hist)])
+    S = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(hist * centers)])
+    return W, S, bins
+
+
+def _interp(c: Array, x: Array, bins: int) -> Array:
+    """Linear interpolation of a cumulative array c at position x in [0,1]."""
+    pos = jnp.clip(x * bins, 0.0, float(bins))
+    i = jnp.clip(pos.astype(jnp.int32), 0, bins - 1)
+    frac = pos - i.astype(jnp.float32)
+    return c[i] * (1 - frac) + c[i + 1] * frac
+
+
+def expected_variance(levels: Array, hist: Array) -> Array:
+    """sum_bins w_b (l_{tau+1} - u_b)(u_b - l_tau) — the QAda objective."""
+    bins = hist.shape[0]
+    centers = (jnp.arange(bins, dtype=jnp.float32) + 0.5) / bins
+    tau = jnp.clip(jnp.searchsorted(levels, centers, side="right") - 1, 0, levels.shape[0] - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    return jnp.sum(hist * (hi - centers) * (centers - lo))
+
+
+@partial(jax.jit, static_argnames=("sweeps", "bisect_iters"))
+def optimize_levels(
+    levels: Array,
+    hist: Array,
+    sweeps: int = 8,
+    bisect_iters: int = 30,
+) -> Array:
+    """Coordinate-descent QAda update of the interior levels.
+
+    levels: [s+2] with fixed endpoints 0, 1.  Returns updated levels.
+    """
+    W, S, bins = _cumulatives(hist)
+    s2 = levels.shape[0]
+
+    def g(l, lo, hi):
+        # LHS - RHS of the stationarity condition at candidate level l.
+        Wl, Wlo, Whi = _interp(W, l, bins), _interp(W, lo, bins), _interp(W, hi, bins)
+        Sl, Slo, Shi = _interp(S, l, bins), _interp(S, lo, bins), _interp(S, hi, bins)
+        lhs = (Sl - Slo) - lo * (Wl - Wlo)
+        rhs = hi * (Whi - Wl) - (Shi - Sl)
+        return lhs - rhs
+
+    def update_one(j, lv):
+        lo = lv[j - 1]
+        hi = lv[j + 1]
+
+        def body(_, ab):
+            a, b = ab
+            mid = 0.5 * (a + b)
+            gm = g(mid, lo, hi)
+            a = jnp.where(gm < 0, mid, a)
+            b = jnp.where(gm < 0, b, mid)
+            return (a, b)
+
+        a, b = jax.lax.fori_loop(0, bisect_iters, body, (lo, hi))
+        newl = 0.5 * (a + b)
+        # keep strict monotonicity with a tiny margin
+        eps = 1e-6
+        newl = jnp.clip(newl, lo + eps, hi - eps)
+        return lv.at[j].set(newl)
+
+    def sweep(_, lv):
+        return jax.lax.fori_loop(1, s2 - 1, update_one, lv)
+
+    return jax.lax.fori_loop(0, sweeps, sweep, levels)
+
+
+def gradient_descent_levels(
+    levels: Array, hist: Array, steps: int = 200, lr: float = 0.05
+) -> Array:
+    """Alternative QAda solver: projected GD on the variance objective."""
+
+    hist = hist / jnp.maximum(jnp.sum(hist), 1e-30)  # scale-free objective
+
+    def loss(interior):
+        lv = jnp.concatenate([jnp.zeros((1,)), interior, jnp.ones((1,))])
+        return expected_variance(lv, hist)
+
+    interior = levels[1:-1]
+    grad = jax.grad(loss)
+
+    def body(_, x):
+        x = x - lr * grad(x)
+        x = jnp.sort(jnp.clip(x, 1e-6, 1 - 1e-6))
+        return x
+
+    interior = jax.lax.fori_loop(0, steps, body, interior)
+    return jnp.concatenate([jnp.zeros((1,)), interior, jnp.ones((1,))])
+
+
+def symbol_probabilities(levels: Array, hist: Array) -> Array:
+    """Proposition 2 — occurrence probability of each level symbol.
+
+    p_j = int_{l_{j-1}}^{l_j} (u - l_{j-1})/(l_j - l_{j-1}) dF~
+        + int_{l_j}^{l_{j+1}} (l_{j+1} - u)/(l_{j+1} - l_j) dF~
+    computed against the (normalized) weighted histogram.
+    """
+    bins = hist.shape[0]
+    total = jnp.maximum(jnp.sum(hist), 1e-30)
+    f = hist / total
+    centers = (jnp.arange(bins, dtype=jnp.float32) + 0.5) / bins
+    tau = jnp.clip(jnp.searchsorted(levels, centers, side="right") - 1, 0, levels.shape[0] - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (centers - lo) / (hi - lo)  # prob of rounding *up* to tau+1
+    s2 = levels.shape[0]
+    p = jnp.zeros((s2,), jnp.float32)
+    p = p.at[tau].add(f * (1 - xi))
+    p = p.at[tau + 1].add(f * xi)
+    return p

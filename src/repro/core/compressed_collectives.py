@@ -1,0 +1,245 @@
+"""Quantized gradient collectives under shard_map (Algorithm 1 on TPU).
+
+Algorithm 1's communication step is: each worker broadcasts CODE o Q(V_k),
+every worker decodes and averages.  On TPU/XLA there is no in-collective
+reduction hook (NCCL-style compressed ring all-reduce does not exist), so
+we implement the two standard schemes explicitly, both moving int8 payloads
+on the wire instead of f32:
+
+* ``mode="gather"`` — quantize the local dual vector, ``all_gather`` the
+  int8 payload (+ per-bucket f32 norms) over the axis, dequantize all K
+  copies locally and average.  Wire: K * d bytes/device (vs 4Kd for f32
+  all-gather).  Faithful to Algorithm 1's broadcast semantics; best for
+  small K (the paper's 3-node experiment).
+
+* ``mode="two_phase"`` — reduce-scatter-style: split the vector into K
+  chunks, quantize, ``all_to_all`` (each device receives everyone's copy of
+  *its* chunk), dequantize + average locally, re-quantize the result, and
+  ``all_gather`` the reduced chunks.  Wire: ~2 * d bytes/device,
+  independent of K — the right choice for the 16-32-way data/pod axes of
+  the production mesh.  The second quantization is also unbiased, so the
+  aggregate remains an unbiased dual vector (the paper's Theorem 1 variance
+  composes: (1+eps_Q)^2 - 1 total multiplier).
+
+Both paths optionally route the elementwise hot loop through the Pallas
+kernels (``use_pallas=True``; interpret mode on CPU).
+
+The pytree entry point :func:`compressed_pmean_tree` fuses all leaves into
+one flat vector (bucket fusion — what CGX/DDP do) so bucket norms amortize
+and one collective moves everything.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (
+    QuantConfig,
+    _pad_to_buckets,
+    bucket_norms,
+)
+from repro.kernels.dequantize import dequantize_blocks
+from repro.kernels.quantize import quantize_blocks
+
+Array = jax.Array
+
+
+def _quantize_2d(x2d, levels, key, cfg: QuantConfig, use_pallas: bool):
+    noise = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    if use_pallas:
+        return quantize_blocks(
+            x2d, noise, levels,
+            num_symbols=cfg.num_symbols, q_is_inf=math.isinf(cfg.q_norm),
+        )
+    from repro.kernels.ref import quantize_blocks_ref
+
+    return quantize_blocks_ref(x2d, noise, levels, q_is_inf=math.isinf(cfg.q_norm))
+
+
+def _dequantize_2d(idx2d, norms, levels, cfg: QuantConfig, use_pallas: bool):
+    if use_pallas:
+        return dequantize_blocks(idx2d, norms, levels, num_symbols=cfg.num_symbols)
+    from repro.kernels.ref import dequantize_blocks_ref
+
+    return dequantize_blocks_ref(idx2d, norms, levels)
+
+
+def _axis_key(key: Array, axis_name) -> Array:
+    """Per-device independent key (independent quantization noise)."""
+    return jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+
+
+def compressed_pmean(
+    x: Array,
+    axis_name,
+    levels: Array,
+    key: Array,
+    cfg: QuantConfig,
+    mode: str = "two_phase",
+    use_pallas: bool = False,
+) -> Array:
+    """Unbiased quantized mean-reduction of a flat vector over ``axis_name``.
+
+    Must be called inside shard_map with ``axis_name`` in scope. ``x`` is
+    each device's local full vector (e.g. its data-parallel gradient).
+    """
+    key = _axis_key(key, axis_name)
+    k1, k2 = jax.random.split(key)
+    n = x.shape[0]
+    axis_size = jax.lax.axis_size(axis_name)
+
+    if mode == "gather":
+        x2d, _ = _pad_to_buckets(x, cfg.bucket_size)
+        idx, norms = _quantize_2d(x2d, levels, k1, cfg, use_pallas)
+        all_idx = jax.lax.all_gather(idx, axis_name)  # [K, nb, bucket] int8
+        all_norms = jax.lax.all_gather(norms, axis_name)  # [K, nb] f32
+        nb, bucket = x2d.shape
+        deq = _dequantize_2d(
+            all_idx.reshape(axis_size * nb, bucket),
+            all_norms.reshape(axis_size * nb),
+            levels, cfg, use_pallas,
+        ).reshape(axis_size, nb * bucket)
+        return jnp.mean(deq, axis=0)[:n]
+
+    if mode == "two_phase":
+        # pad so n splits into K chunks of whole buckets
+        chunk_quota = axis_size * cfg.bucket_size
+        n_pad = -(-n // chunk_quota) * chunk_quota
+        xp = jnp.pad(x, (0, n_pad - n))
+        chunk = n_pad // axis_size
+        x2d = xp.reshape(axis_size * (chunk // cfg.bucket_size), cfg.bucket_size)
+        idx, norms = _quantize_2d(x2d, levels, k1, cfg, use_pallas)
+        nb_per_chunk = chunk // cfg.bucket_size
+        # [K, nb_per_chunk, bucket] — row k is the chunk destined to device k
+        idx = idx.reshape(axis_size, nb_per_chunk, cfg.bucket_size)
+        norms = norms.reshape(axis_size, nb_per_chunk)
+        # all_to_all: device k receives everyone's copy of chunk k
+        idx_t = jax.lax.all_to_all(idx, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        norms_t = jax.lax.all_to_all(norms, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        deq = _dequantize_2d(
+            idx_t.reshape(axis_size * nb_per_chunk, cfg.bucket_size),
+            norms_t.reshape(axis_size * nb_per_chunk),
+            levels, cfg, use_pallas,
+        ).reshape(axis_size, chunk)
+        reduced = jnp.mean(deq, axis=0)  # this device's chunk of the mean
+        # re-quantize (unbiased) and share the reduced chunk with everyone
+        r2d = reduced.reshape(nb_per_chunk, cfg.bucket_size)
+        ridx, rnorms = _quantize_2d(r2d, levels, k2, cfg, use_pallas)
+        g_idx = jax.lax.all_gather(ridx, axis_name, tiled=True)
+        g_norms = jax.lax.all_gather(rnorms, axis_name, tiled=True)
+        out = _dequantize_2d(g_idx, g_norms, levels, cfg, use_pallas)
+        return out.reshape(-1)[:n]
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def compressed_pmean_tree(
+    tree,
+    axis_name,
+    levels: Array,
+    key: Array,
+    cfg: Optional[QuantConfig],
+    mode: str = "two_phase",
+    use_pallas: bool = False,
+):
+    """Quantized pmean of a gradient pytree (bucket-fused).
+
+    ``cfg=None`` falls back to the exact ``jax.lax.pmean`` (the FP32
+    baseline of the paper's Figure 1).
+    """
+    if cfg is None:
+        return jax.lax.pmean(tree, axis_name)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    out = compressed_pmean(flat, axis_name, levels, key, cfg, mode, use_pallas)
+    outs = []
+    off = 0
+    for l, sz in zip(leaves, sizes):
+        outs.append(out[off : off + sz].reshape(l.shape).astype(l.dtype))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def compressed_pmean_leafwise(
+    tree,
+    axis_name,
+    levels: Array,
+    key: Array,
+    cfg: Optional[QuantConfig],
+):
+    """Quantized pmean that PRESERVES inner (auto-axis) shardings.
+
+    For use inside ``shard_map(..., axis_names={axis_name})`` where the
+    other mesh axes stay under GSPMD: the flat-concat path
+    (:func:`compressed_pmean_tree`) reshapes every leaf, which forces XLA
+    to re-gather the inner-sharded gradients.  Here each leaf is quantized
+    *in place* — per-row L^q norms over the last dim (the "bucket" is the
+    trailing dimension), elementwise stochastic rounding, int8 payload of
+    identical shape — so only the ``all_gather`` over the manual axis moves
+    data, and it moves int8.
+
+    Semantically still Definition 1 (unbiased, normalized quantization);
+    the bucket size is the leaf's trailing dim instead of a fixed 1024 —
+    Theorem 1 holds with d = trailing dim.
+    """
+    if cfg is None:
+        return jax.lax.pmean(tree, axis_name)
+    from repro.core.quantization import _stochastic_round_indices
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(_axis_key(key, axis_name), len(leaves))
+    axis_size = jax.lax.axis_size(axis_name)
+    out = []
+    lv = levels.astype(jnp.float32)
+    for g, k in zip(leaves, keys):
+        gf = g.astype(jnp.float32)
+        if math.isinf(cfg.q_norm):
+            norms = jnp.max(jnp.abs(gf), axis=-1, keepdims=True)
+        else:
+            norms = jnp.sqrt(jnp.sum(gf * gf, axis=-1, keepdims=True))
+        safe = jnp.where(norms > 0, norms, 1.0)
+        u = jnp.clip(jnp.abs(gf) / safe, 0.0, 1.0)
+        idx = _stochastic_round_indices(u, lv, k, cfg.stochastic)
+        signed = jnp.where(gf < 0, -idx, idx)
+        # the only cross-device traffic: int8/int4 payload + f32 row norms
+        pack4 = cfg.bits == 4 and g.shape[-1] % 2 == 0
+        if pack4:
+            a = signed[..., 0::2] & 0xF
+            b = signed[..., 1::2] & 0xF
+            payload = (a | (b << 4)).astype(jnp.uint8)
+        else:
+            payload = signed.astype(jnp.int8)
+        all_p = jax.lax.all_gather(payload, axis_name)  # [K, ...]
+        all_norms = jax.lax.all_gather(norms, axis_name)
+        if pack4:
+            pa = all_p.astype(jnp.int32) & 0xF
+            pb = (all_p.astype(jnp.int32) >> 4) & 0xF
+            pa = jnp.where(pa >= 8, pa - 16, pa)
+            pb = jnp.where(pb >= 8, pb - 16, pb)
+            all_idx = jnp.stack([pa, pb], axis=-1).reshape(all_p.shape[:-1] + (g.shape[-1],))
+        else:
+            all_idx = all_p.astype(jnp.int32)
+        mag = jnp.abs(all_idx)
+        vals = lv[mag] * jnp.sign(all_idx.astype(jnp.float32)) * all_norms
+        out.append(jnp.mean(vals, axis=0).astype(g.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def wire_bytes_per_device(
+    n: int, axis_size: int, cfg: Optional[QuantConfig], mode: str = "two_phase"
+) -> float:
+    """Analytic bytes each device transmits per reduction (for EXPERIMENTS)."""
+    if cfg is None:
+        # ring all-reduce of f32: 2 * (K-1)/K * 4n
+        return 2 * (axis_size - 1) / axis_size * 4.0 * n
+    payload = cfg.payload_bytes(n)
+    if mode == "gather":
+        return float(payload)  # each device injects its payload once
+    # two_phase: a2a sends (K-1)/K of payload, gather sends payload/K again
+    return float(payload) * ((axis_size - 1) / axis_size + 1.0 / axis_size)

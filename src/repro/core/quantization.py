@@ -1,0 +1,339 @@
+"""Unbiased random quantization Q_ell (Definition 1 of the paper).
+
+A vector ``v`` is represented by the tuple ``(||v||_q, sign(v), u)`` with
+normalized coordinates ``u_i = |v_i| / ||v||_q in [0, 1]``.  Each ``u_i`` is
+stochastically rounded to one of the quantization levels
+``0 = l_0 < l_1 < ... < l_s < l_{s+1} = 1`` such that the rounding is
+unbiased: ``E[q(u)] = u`` (Theorem 1 of the paper).
+
+In practice (QSGD / NUQSGD / CGX lineage) the norm is computed per *bucket*
+of ``bucket_size`` consecutive coordinates, which bounds the dynamic range a
+single scalar norm has to cover and is what the paper's experiments use
+(bucket size 1024).
+
+The payload is a signed level *index* per coordinate (fits int8 for
+``s + 1 <= 127``; packed two-per-byte for 4-bit mode) plus one f32 norm per
+bucket.  Entropy coding on top of the indices is handled in
+:mod:`repro.core.coding` (host-side, Theorem 2 accounting).
+
+Everything here is pure jnp and jit/vmap/shard_map friendly; the Pallas TPU
+kernels in :mod:`repro.kernels` implement the same contract and are verified
+against this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of the quantizer.
+
+    Attributes:
+      num_levels: ``s`` — number of *interior* levels (total symbols = s + 2,
+        including the implicit 0 and 1 endpoints).
+      q_norm: the ``q`` of the L^q normalization. ``math.inf`` reproduces
+        QSGDinf-style max-normalization; 2.0 reproduces QSGD.
+      bucket_size: coordinates per norm bucket.
+      bits: fixed-width payload: 8 (one signed index per byte) or 4
+        (two signed indices per byte; requires s + 1 <= 7).
+      stochastic: stochastic (unbiased) vs nearest (biased, for ablation)
+        rounding.
+    """
+
+    num_levels: int = 15
+    q_norm: float = math.inf
+    bucket_size: int = 1024
+    bits: int = 8
+    stochastic: bool = True
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"bits must be 4 or 8, got {self.bits}")
+        max_idx = self.num_levels + 1
+        limit = 7 if self.bits == 4 else 127
+        if max_idx > limit:
+            raise ValueError(
+                f"num_levels={self.num_levels} does not fit {self.bits}-bit payload"
+            )
+        if self.bucket_size % 2:
+            raise ValueError("bucket_size must be even (4-bit packing)")
+
+    @property
+    def num_symbols(self) -> int:
+        return self.num_levels + 2
+
+    def payload_bytes(self, n: int) -> int:
+        """Fixed-width wire bytes for an n-coordinate vector (excl. norms)."""
+        nb = -(-n // self.bucket_size)  # ceil
+        per_coord = 1 if self.bits == 8 else 0.5
+        return int(math.ceil(n * per_coord)) + 4 * nb
+
+
+# ---------------------------------------------------------------------------
+# Level sequences
+# ---------------------------------------------------------------------------
+
+
+def uniform_levels(s: int, dtype=jnp.float32) -> Array:
+    """QSGD-style uniform levels: j / (s + 1), j = 0..s+1."""
+    return jnp.linspace(0.0, 1.0, s + 2, dtype=dtype)
+
+
+def exponential_levels(s: int, dtype=jnp.float32) -> Array:
+    """NUQSGD-style levels: 0, 2^-s, 2^-(s-1), ..., 1/2, 1."""
+    interior = 2.0 ** jnp.arange(-s, 0, dtype=dtype)
+    return jnp.concatenate([jnp.zeros((1,), dtype), interior, jnp.ones((1,), dtype)])
+
+
+def validate_levels(levels: Array, s: int) -> None:
+    levels = np.asarray(levels)
+    if levels.shape != (s + 2,):
+        raise ValueError(f"levels must have shape ({s + 2},), got {levels.shape}")
+    if levels[0] != 0.0 or levels[-1] != 1.0:
+        raise ValueError("levels must start at 0 and end at 1")
+    if not np.all(np.diff(levels) > 0):
+        raise ValueError("levels must be strictly increasing")
+
+
+# ---------------------------------------------------------------------------
+# Bucketing helpers
+# ---------------------------------------------------------------------------
+
+
+def _pad_to_buckets(flat: Array, bucket: int) -> tuple[Array, int]:
+    n = flat.shape[0]
+    nb = -(-n // bucket)
+    pad = nb * bucket - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(nb, bucket), n
+
+
+def bucket_norms(v2d: Array, q: float) -> Array:
+    """Per-bucket L^q norm, v2d: [nb, bucket] -> [nb]."""
+    a = jnp.abs(v2d.astype(jnp.float32))
+    if math.isinf(q):
+        return jnp.max(a, axis=-1)
+    if q == 2.0:
+        return jnp.sqrt(jnp.sum(a * a, axis=-1))
+    if q == 1.0:
+        return jnp.sum(a, axis=-1)
+    return jnp.sum(a**q, axis=-1) ** (1.0 / q)
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize (flat vectors)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Quantized:
+    """Quantized representation of a flat vector.
+
+    payload: int8 — signed level indices, [nb * bucket] (8-bit mode) or
+      packed two-per-byte [nb * bucket // 2] (4-bit mode).
+    norms: f32 [nb] per-bucket L^q norms.
+    n: original (unpadded) length.
+    """
+
+    payload: Array
+    norms: Array
+    n: int
+
+    def tree_flatten(self):
+        return (self.payload, self.norms), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    def wire_bytes(self) -> int:
+        return int(self.payload.size * self.payload.dtype.itemsize + self.norms.size * 4)
+
+
+jax.tree_util.register_pytree_node(
+    Quantized, Quantized.tree_flatten, Quantized.tree_unflatten
+)
+
+
+def _stochastic_round_indices(
+    u: Array, levels: Array, key: Optional[Array], stochastic: bool
+) -> Array:
+    """Map normalized coords u in [0,1] to level indices (unbiased).
+
+    u: [nb, bucket] float32. Returns int32 indices in [0, s+1].
+    """
+    s2 = levels.shape[0]
+    # tau(u): largest j with levels[j] <= u  (in [0, s])
+    tau = jnp.clip(jnp.searchsorted(levels, u, side="right") - 1, 0, s2 - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (u - lo) / (hi - lo)
+    if stochastic:
+        assert key is not None
+        r = jax.random.uniform(key, u.shape, dtype=u.dtype)
+        up = (r < xi).astype(jnp.int32)
+    else:
+        up = (xi >= 0.5).astype(jnp.int32)
+    return tau + up
+
+
+def pack_int4(idx_signed: Array) -> Array:
+    """Pack signed 4-bit values (int32 in [-7,7]) two-per-int8.
+
+    Layout: byte = (a & 0xF) | ((b & 0xF) << 4) for consecutive pairs (a, b).
+    """
+    flat = idx_signed.reshape(-1, 2)
+    a = flat[:, 0] & 0xF
+    b = flat[:, 1] & 0xF
+    return (a | (b << 4)).astype(jnp.uint8).view(jnp.int8)
+
+
+def unpack_int4(packed: Array) -> Array:
+    """Inverse of :func:`pack_int4` -> int32 signed values, shape [2*len]."""
+    p = packed.view(jnp.uint8).astype(jnp.int32)
+    a = p & 0xF
+    b = (p >> 4) & 0xF
+    # sign-extend 4-bit two's complement
+    a = jnp.where(a >= 8, a - 16, a)
+    b = jnp.where(b >= 8, b - 16, b)
+    return jnp.stack([a, b], axis=-1).reshape(-1)
+
+
+def quantize(
+    v: Array,
+    levels: Array,
+    key: Optional[Array],
+    cfg: QuantConfig,
+) -> Quantized:
+    """Quantize a flat vector per Definition 1 (bucketed L^q normalization)."""
+    flat = v.reshape(-1)
+    v2d, n = _pad_to_buckets(flat, cfg.bucket_size)
+    v2d = v2d.astype(jnp.float32)
+    norms = bucket_norms(v2d, cfg.q_norm)
+    safe = jnp.where(norms > 0, norms, 1.0)
+    u = jnp.abs(v2d) / safe[:, None]
+    u = jnp.clip(u, 0.0, 1.0)
+    idx = _stochastic_round_indices(u, levels.astype(jnp.float32), key, cfg.stochastic)
+    sign = jnp.where(v2d < 0, -1, 1).astype(jnp.int32)
+    signed_idx = idx * sign
+    if cfg.bits == 8:
+        payload = signed_idx.reshape(-1).astype(jnp.int8)
+    else:
+        payload = pack_int4(signed_idx.reshape(-1))
+    return Quantized(payload=payload, norms=norms, n=n)
+
+
+def dequantize(qt: Quantized, levels: Array, cfg: QuantConfig) -> Array:
+    """Inverse map: signed indices * per-bucket norm * level value."""
+    if cfg.bits == 8:
+        signed_idx = qt.payload.astype(jnp.int32)
+    else:
+        signed_idx = unpack_int4(qt.payload)
+    idx = jnp.abs(signed_idx)
+    sign = jnp.sign(signed_idx).astype(jnp.float32)
+    vals = levels.astype(jnp.float32)[idx] * sign
+    v2d = vals.reshape(-1, cfg.bucket_size) * qt.norms[:, None]
+    return v2d.reshape(-1)[: qt.n]
+
+
+def quantize_dequantize(
+    v: Array, levels: Array, key: Optional[Array], cfg: QuantConfig
+) -> Array:
+    """Fused Q then DEQ (what the math sees: hat{v} = Q_ell(v))."""
+    return dequantize(quantize(v, levels, key, cfg), levels, cfg).reshape(v.shape)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level API (dual vectors are parameter pytrees in model training)
+# ---------------------------------------------------------------------------
+
+
+def quantize_pytree(tree, levels: Array, key: Array, cfg: QuantConfig):
+    """Quantize every leaf of a pytree with independent keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    qleaves = [quantize(l, levels, k, cfg) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, qleaves)
+
+
+def dequantize_pytree(qtree, shapes_tree, levels: Array, cfg: QuantConfig):
+    """Dequantize a pytree of Quantized back to the original leaf shapes."""
+    qleaves, treedef = jax.tree_util.tree_flatten(
+        qtree, is_leaf=lambda x: isinstance(x, Quantized)
+    )
+    shape_leaves = jax.tree_util.tree_leaves(
+        shapes_tree, is_leaf=lambda x: isinstance(x, (tuple, jax.ShapeDtypeStruct))
+    )
+    out = []
+    for q, sh in zip(qleaves, shape_leaves):
+        shape = sh.shape if hasattr(sh, "shape") else sh
+        out.append(dequantize(q, levels, cfg).reshape(shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_dequantize_pytree(tree, levels: Array, key: Array, cfg: QuantConfig):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [
+        quantize_dequantize(l, levels, k, cfg).astype(l.dtype)
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 — analytic variance bound epsilon_Q
+# ---------------------------------------------------------------------------
+
+
+def theorem1_epsilon_q(levels: np.ndarray, d: int, q: float) -> float:
+    """Analytic variance multiplier bound of Theorem 1.
+
+    eps_Q = (lbar + 1/lbar)/4 - 1/2
+            + 1/4 l1^2 d^{2/min(q,2)}            if d <= d_th
+            + (l1 d^{1/min(q,2)} - 1)            if d >= d_th
+    with lbar = max_j l_{j+1}/l_j (over interior ratios) and
+    d_th = (2 / l1)^{min(q,2)}.
+    """
+    levels = np.asarray(levels, dtype=np.float64)
+    interior = levels[1:-1]
+    l1 = float(levels[1])
+    ratios = levels[2:] / np.maximum(levels[1:-1], 1e-30)
+    lbar = float(np.max(ratios)) if ratios.size else 1.0
+    qm = min(q, 2.0)
+    d_th = (2.0 / l1) ** qm
+    eps = (lbar + 1.0 / lbar) / 4.0 - 0.5
+    if d <= d_th:
+        eps += 0.25 * l1**2 * d ** (2.0 / qm)
+    else:
+        eps += l1 * d ** (1.0 / qm) - 1.0
+    return float(max(eps, 0.0))
+
+
+def empirical_variance_multiplier(
+    v: Array, levels: Array, cfg: QuantConfig, key: Array, trials: int = 64
+) -> float:
+    """Monte-Carlo E||Q(v) - v||^2 / ||v||^2 (for Theorem 1 validation)."""
+    keys = jax.random.split(key, trials)
+
+    flat = v.reshape(-1).astype(jnp.float32)
+
+    def one(k):
+        vv = quantize_dequantize(v, levels, k, cfg).reshape(-1)
+        return jnp.sum((vv - flat) ** 2)
+
+    errs = jax.vmap(one)(keys)
+    denom = jnp.sum(v.astype(jnp.float32) ** 2)
+    return float(jnp.mean(errs) / denom)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the quantize/dequantize hot spots of Q-GenX.
+
+quantize.py / dequantize.py — pl.pallas_call kernels (BlockSpec VMEM tiling)
+dequant_reduce.py — fused dequantize+mean over K workers (exchange consumer)
+ops.py — jitted wrappers matching repro.core.quantization's contract
+ref.py — pure-jnp oracle used by the allclose/bit-exact tests
+"""
+
+from repro.kernels.dequant_reduce import dequant_reduce_blocks  # noqa: F401
+from repro.kernels.ops import dequantize_pallas, quantize_pallas  # noqa: F401

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused dequantize + mean-reduce over K workers.
+
+The consumer side of Algorithm 1's exchange: after the ``all_gather`` each
+device holds K int8 payloads + K norm vectors and must produce
+``mean_k DEQ(payload_k)``.  Doing this as dequantize-then-mean (two jnp
+ops) writes K full f32 buffers to HBM and reads them back; this kernel
+streams the K payloads tile-by-tile through VMEM and emits only the final
+mean — HBM traffic drops from ``(2K+1) x 4n`` bytes to ``K x n + 4n``
+(the int8 reads plus one f32 write), an ~8x reduction at K=8.
+
+Grid tiles rows of buckets; the K-reduction is an unrolled loop in the
+kernel body (K is a static mesh constant: 2 pods / 3 GAN nodes / 8 DP
+hosts), so partial sums live in VREGs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS_PER_BLOCK = 8
+
+
+def _dequant_reduce_kernel(
+    idx_ref,     # [K, BB, bucket] int8 VMEM
+    norms_ref,   # [K, BB] f32 VMEM
+    levels_ref,  # [s+2] f32 SMEM
+    out_ref,     # [BB, bucket] f32 VMEM
+    *,
+    num_symbols: int,
+    num_workers: int,
+):
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for k in range(num_workers):  # static unroll — K is a mesh constant
+        signed = idx_ref[k].astype(jnp.int32)
+        mag = jnp.abs(signed)
+        sign = jnp.where(signed < 0, -1.0, 1.0)
+        vals = jnp.zeros(mag.shape, jnp.float32)
+        for j in range(num_symbols):
+            vals = jnp.where(mag == j, levels_ref[j], vals)
+        acc = acc + vals * sign * norms_ref[k][:, None]
+    out_ref[...] = acc * (1.0 / num_workers)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_symbols", "num_workers", "interpret")
+)
+def dequant_reduce_blocks(
+    idx: jax.Array,    # [K, nb, bucket] int8
+    norms: jax.Array,  # [K, nb] f32
+    levels: jax.Array,
+    *,
+    num_symbols: int,
+    num_workers: int,
+    interpret: bool = True,
+):
+    K, nb, bucket = idx.shape
+    assert K == num_workers
+    bb = math.gcd(ROWS_PER_BLOCK, nb)
+    grid = (nb // bb,)
+    kernel = functools.partial(
+        _dequant_reduce_kernel,
+        num_symbols=num_symbols,
+        num_workers=num_workers,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, bb, bucket), lambda i: (0, i, 0)),
+            pl.BlockSpec((K, bb), lambda i: (0, i)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bucket), jnp.float32),
+        interpret=pltpu.InterpretParams() if interpret else False,
+    )(idx, norms.astype(jnp.float32), levels.astype(jnp.float32))
+
+
+def dequant_reduce_ref(idx, norms, levels):
+    """Pure-jnp oracle: mean_k levels[|idx_k|] * sign(idx_k) * norm_k."""
+    signed = idx.astype(jnp.int32)
+    vals = levels.astype(jnp.float32)[jnp.abs(signed)]
+    out = vals * jnp.sign(signed).astype(jnp.float32) * norms[..., None]
+    return jnp.mean(out, axis=0)

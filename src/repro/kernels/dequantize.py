@@ -1,0 +1,66 @@
+"""Pallas TPU kernel for dequantization (DEQ of Algorithm 1).
+
+Reads the int8 signed-index payload and per-bucket norms, reconstructs
+f32 values: v = sign(idx) * levels[|idx|] * norm_bucket.  Like the
+quantizer this is a pure bandwidth kernel; the payload is 4x smaller than
+the output, so the kernel is output-bandwidth-bound — tiles are chosen so
+each (8,128) f32 output tile is produced from a single contiguous int8
+input tile.  The level table lookup is an unrolled compare-select over the
+(static, small) symbol count, which the VPU executes as vectorized selects.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS_PER_BLOCK = 8
+
+
+def _dequantize_kernel(
+    idx_ref,     # [BB, bucket] int8 VMEM
+    norms_ref,   # [BB] f32 VMEM
+    levels_ref,  # [s+2] f32 SMEM
+    out_ref,     # [BB, bucket] f32 VMEM
+    *,
+    num_symbols: int,
+):
+    signed = idx_ref[...].astype(jnp.int32)
+    mag = jnp.abs(signed)
+    sign = jnp.where(signed < 0, -1.0, 1.0)
+    vals = jnp.zeros(mag.shape, jnp.float32)
+    for j in range(num_symbols):
+        vals = jnp.where(mag == j, levels_ref[j], vals)
+    out_ref[...] = vals * sign * norms_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_symbols", "interpret"))
+def dequantize_blocks(
+    idx2d: jax.Array,
+    norms: jax.Array,
+    levels: jax.Array,
+    *,
+    num_symbols: int,
+    interpret: bool = True,
+):
+    nb, bucket = idx2d.shape
+    bb = math.gcd(ROWS_PER_BLOCK, nb)
+    grid = (nb // bb,)
+    kernel = functools.partial(_dequantize_kernel, num_symbols=num_symbols)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bucket), jnp.float32),
+        interpret=pltpu.InterpretParams() if interpret else False,
+    )(idx2d, norms.astype(jnp.float32), levels.astype(jnp.float32))

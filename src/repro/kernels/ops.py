@@ -1,0 +1,70 @@
+"""Jitted public wrappers around the Pallas quantize/dequantize kernels.
+
+Drop-in replacements for :func:`repro.core.quantization.quantize` /
+``dequantize`` that route the hot inner loop through the Pallas kernels.
+On this CPU container the kernels run in TPU interpret mode; on real TPUs
+set ``interpret=False`` (and optionally ``use_device_prng=True``).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (
+    QuantConfig,
+    Quantized,
+    pack_int4,
+    unpack_int4,
+    _pad_to_buckets,
+)
+from repro.kernels.dequantize import dequantize_blocks
+from repro.kernels.quantize import quantize_blocks
+
+
+def quantize_pallas(
+    v: jax.Array,
+    levels: jax.Array,
+    key: jax.Array,
+    cfg: QuantConfig,
+    *,
+    interpret: bool = True,
+    use_device_prng: bool = False,
+) -> Quantized:
+    flat = v.reshape(-1)
+    x2d, n = _pad_to_buckets(flat, cfg.bucket_size)
+    noise = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    idx, norms = quantize_blocks(
+        x2d,
+        noise,
+        levels,
+        num_symbols=cfg.num_symbols,
+        q_is_inf=math.isinf(cfg.q_norm),
+        use_device_prng=use_device_prng,
+        interpret=interpret,
+    )
+    payload = idx.reshape(-1)
+    if cfg.bits == 4:
+        payload = pack_int4(payload.astype(jnp.int32))
+    return Quantized(payload=payload, norms=norms, n=n)
+
+
+def dequantize_pallas(
+    qt: Quantized,
+    levels: jax.Array,
+    cfg: QuantConfig,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    if cfg.bits == 4:
+        idx = unpack_int4(qt.payload).astype(jnp.int8)
+    else:
+        idx = qt.payload
+    idx2d = idx.reshape(-1, cfg.bucket_size)
+    out = dequantize_blocks(
+        idx2d, qt.norms, levels, num_symbols=cfg.num_symbols, interpret=interpret
+    )
+    return out.reshape(-1)[: qt.n]

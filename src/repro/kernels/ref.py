@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+The canonical implementation lives in :mod:`repro.core.quantization`; this
+module exposes it in kernel-shaped form ([nb, bucket] blocks with explicit
+noise) so tests can assert bit-exact agreement between the Pallas kernels
+and the reference under identical random draws.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import bucket_norms
+
+
+def quantize_blocks_ref(
+    x2d: jax.Array,
+    noise: jax.Array,
+    levels: jax.Array,
+    *,
+    q_is_inf: bool,
+):
+    """Reference for kernels.quantize.quantize_blocks (same contract)."""
+    x2d = x2d.astype(jnp.float32)
+    levels = levels.astype(jnp.float32)
+    norms = bucket_norms(x2d, math.inf if q_is_inf else 2.0)
+    safe = jnp.where(norms > 0, norms, 1.0)
+    u = jnp.clip(jnp.abs(x2d) / safe[:, None], 0.0, 1.0)
+    s2 = levels.shape[0]
+    tau = jnp.clip(jnp.searchsorted(levels, u, side="right") - 1, 0, s2 - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (u - lo) / (hi - lo)
+    up = (noise < xi).astype(jnp.int32)
+    idx = tau + up
+    signed = jnp.where(x2d < 0, -idx, idx).astype(jnp.int8)
+    return signed, norms
+
+
+def dequantize_blocks_ref(idx2d: jax.Array, norms: jax.Array, levels: jax.Array):
+    signed = idx2d.astype(jnp.int32)
+    vals = levels.astype(jnp.float32)[jnp.abs(signed)]
+    return vals * jnp.sign(signed).astype(jnp.float32) * norms[:, None]

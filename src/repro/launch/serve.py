@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill a prompt batch, then greedy decode.
+
+Example (CPU, reduced model):
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+      --batch 4 --prompt-len 16 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config
+from repro.launch.steps import make_serve_step
+from repro.models.model import build
+
+
+def prefill_into_cache(model, params, tokens, cache):
+    """Populate the cache by teacher-forcing the prompt token-by-token.
+
+    (A production prefill runs the full-sequence kernel and writes the cache
+    in one shot; the loop keeps this driver architecture-agnostic — SSM and
+    MLA caches fill through the same decode_step contract.)
+    """
+    step = jax.jit(model.decode_step)
+    B, S = tokens.shape
+    logits = None
+    for pos in range(S):
+        logits, cache = step(params, cache, tokens[:, pos], jnp.asarray(pos, jnp.int32))
+    return logits, cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    B = args.batch
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.arch_type in ("encdec", "audio"):
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(params, batch, max_len)
+
+    t0 = time.time()
+    logits, cache = prefill_into_cache(model, params, prompts, cache)
+    t_prefill = time.time() - t0
+
+    serve = jax.jit(make_serve_step(model))
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    generated = [token]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        token, logits, cache = serve(params, cache, token, pos)
+        generated.append(token)
+    t_decode = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in generated], axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={args.prompt_len} gen={args.gen}")
+    print(f"[serve] prefill={t_prefill*1e3:.0f}ms decode={t_decode*1e3:.0f}ms "
+          f"({t_decode/max(args.gen-1,1)*1e3:.1f}ms/tok)")
+    print(f"[serve] sample tokens: {gen[0][:12].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Train / serve step builders — where the paper's technique meets the model.
+
+Distribution model (see DESIGN.md §5):
+
+* Within a pod: GSPMD — params 2-D sharded (FSDP over ``data``, TP/EP over
+  ``model``); XLA inserts exact reduce-scatters for the intra-pod gradient
+  reduction (fast ICI — compression not worth it there; App. I trade-off).
+* Across pods: params are replicated, the gradient reduction crosses the
+  slow inter-pod links — this is where Algorithm 1's quantized exchange is
+  applied, via ``shard_map`` over the ``pod`` axis with ``auto`` GSPMD for
+  the inner axes.  ``compress_axis="data"`` gives the paper's original
+  DDP-over-Ethernet setting (params replicated over data; used by the CPU
+  examples with 8 host devices).
+
+Optimizer = ExtraAdam family (the paper's experimental instantiation);
+both gradient exchanges of the extra-gradient step are compressed, exactly
+like Algorithm 1's two broadcast rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.compressed_collectives import (
+    compressed_pmean_leafwise,
+    compressed_pmean_tree,
+)
+from repro.core.quantization import QuantConfig, uniform_levels
+from repro.models.model import Model
+from repro.optim import optimizers as opt
+
+Array = jax.Array
+
+
+def cross_entropy_loss(logits: Array, labels: Array, aux: Array) -> Array:
+    ll = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(ll, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + 0.01 * aux
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        return cross_entropy_loss(logits, batch["labels"], aux)
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: opt.OptimizerConfig,
+    *,
+    quant: Optional[QuantConfig] = None,
+    compress_axis: Optional[str] = None,  # "pod" | "data" | None
+    compress_mode: str = "two_phase",
+    mesh=None,
+):
+    """Returns step(params, opt_state, batch, key) -> (params, state, metrics).
+
+    With ``compress_axis`` set, the returned function must be jitted under
+    ``mesh`` and wraps a shard_map over that axis (params replicated across
+    it, batch sharded, all other mesh axes left to GSPMD via ``auto``).
+    """
+    loss_fn = make_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn)
+    levels = uniform_levels(quant.num_levels) if quant else None
+
+    def exchange(grads, key):
+        if compress_axis is None:
+            return grads  # XLA's exact psum/reduce-scatter handles it
+        if compress_mode == "leafwise":
+            # sharding-preserving path (production mesh: inner axes auto)
+            return compressed_pmean_leafwise(grads, compress_axis, levels, key, quant)
+        return compressed_pmean_tree(
+            grads, compress_axis, levels, key, quant, mode=compress_mode
+        )
+
+    def core_step(params, opt_state, batch, key):
+        k1, k2 = jax.random.split(key)
+        if opt_cfg.name == "extra_adam":
+            loss1, g1 = grad_fn(params, batch)
+            g1 = exchange(g1, k1)
+            params_half = opt.extrapolate(opt_cfg, params, opt_state, g1)
+            loss, g2 = grad_fn(params_half, batch)
+            g2 = exchange(g2, k2)
+            new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
+        elif opt_cfg.name == "optimistic_adam":
+            prev = opt_state.prev_half_grad
+            params_half = opt.extrapolate(opt_cfg, params, opt_state, prev)
+            loss, g2 = grad_fn(params_half, batch)
+            g2 = exchange(g2, k2)
+            new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
+        else:  # adam baseline
+            loss, g = grad_fn(params, batch)
+            g = exchange(g, k2)
+            new_params, new_state = opt.adam_step(opt_cfg, params, opt_state, g)
+        if compress_axis is not None:
+            loss = jax.lax.pmean(loss, compress_axis)  # replicated metric
+        metrics = {"loss": loss}
+        return new_params, new_state, metrics
+
+    if compress_axis is None:
+        return core_step
+
+    assert mesh is not None, "compressed training needs the mesh for shard_map"
+
+    # params/opt_state replicated over the compressed axis (pure DP across
+    # it); batch sharded on its leading dim; key replicated (folded inside);
+    # all OTHER mesh axes stay under automatic (GSPMD) partitioning —
+    # jax.shard_map's axis_names selects the manual subset.
+    def sharded_step(params, opt_state, batch, key):
+        batch_specs = {
+            k: P(compress_axis, *([None] * (v.ndim - 1))) for k, v in batch.items()
+        }
+        fn = jax.shard_map(
+            core_step,
+            mesh=mesh,
+            in_specs=(P(), P(), batch_specs, P()),
+            out_specs=(P(), P(), {"loss": P()}),
+            check_vma=False,
+            axis_names={compress_axis},
+        )
+        return fn(params, opt_state, batch, key)
+
+    return sharded_step
+
+
+def make_prefill_step(model: Model):
+    """Forward-only (inference prefill)."""
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(model: Model):
+    """One greedy decode step against a KV cache."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return serve_step

@@ -1,0 +1,11 @@
+"""Model zoo: dense / MoE / MLA / SSM / hybrid / enc-dec transformer stacks."""
+
+from repro.models.model import (  # noqa: F401
+    Model,
+    batch_pspecs,
+    build,
+    cache_pspecs,
+    fit_pspecs,
+    input_specs,
+    param_pspecs,
+)

@@ -1,0 +1,528 @@
+"""Building blocks: norms, rotary embeddings, MLPs, attention (full /
+sliding-window / chunk-local / GQA / MQA / qk-norm), KV-cache ops, MLA.
+
+Functional style: each block is an (init, apply) pair; params are plain
+dict pytrees; dtype policy: params in cfg.dtype, math in f32 where it
+matters (norms, softmax, rope).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, with_bias: Optional[bool] = None):
+    d = cfg.d_model
+    if with_bias is None:
+        with_bias = cfg.norm_type == "layernorm"
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x: Array, norm_type: str) -> Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+        if "bias" in p:
+            out = out + p["bias"]
+    return out.astype(x.dtype)
+
+
+def head_rms_norm(scale: Array, x: Array) -> Array:
+    """Per-head rms norm over head_dim (qwen3-style qk_norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: Array, dim: int, theta: float):
+    """positions [..., S] -> cos/sin [..., S, dim/2] (f32)."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x [..., S, H, hd]; cos/sin [..., S, hd/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": _init(k1, (d, f), d**-0.5, dt),
+        "wo": _init(k2, (f, d), f**-0.5, dt),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["wg"] = _init(k3, (d, f), d**-0.5, dt)
+    return p
+
+
+def mlp_apply(p, x: Array, mlp_type: str) -> Array:
+    h = x @ p["wi"]
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA, qk-norm, rope, sliding window, chunk-local)
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, H, hd), d**-0.5, dt),
+        "wk": _init(ks[1], (d, KV, hd), d**-0.5, dt),
+        "wv": _init(ks[2], (d, KV, hd), d**-0.5, dt),
+        "wo": _init(ks[3], (H, hd, d), (H * hd) ** -0.5, dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _repeat_kv(k: Array, H: int) -> Array:
+    """[B, S, KV, hd] -> [B, S, H, hd] by repeating groups."""
+    KV = k.shape[-2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=-2)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [B,Sq,H,hd], k/v [B,Sk,H,hd], mask broadcastable [B,1,Sq,Sk]."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def _causal_mask(Sq: int, Sk: int, offset: int = 0):
+    """Query i attends key j iff j <= i + offset."""
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    return kj <= qi + offset
+
+
+def full_attention(q, k, v, causal: bool):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    mask = _causal_mask(Sq, Sk, offset=Sk - Sq) if causal else jnp.ones((Sq, Sk), bool)
+    return _sdpa(q, k, v, mask[None, None], hd**-0.5)
+
+
+def blockwise_attention(q, k, v, causal: bool, q_chunk: int = 2048, k_chunk: int = 2048):
+    """Memory-efficient (flash-style, online-softmax) causal attention.
+
+    Never materializes the S x S score matrix: scores exist one
+    [B, H, Cq, Ck] tile at a time inside a scan over KV chunks nested in a
+    scan over Q chunks — the XLA-level analogue of flash attention's VMEM
+    tiling (a Pallas kernel would pin the tiles in VMEM; the scan form
+    already removes the O(S^2) HBM traffic that dominates the 32k-prefill
+    roofline — see EXPERIMENTS.md §Perf).  FLOPs match naive full
+    attention (masked tiles are still computed, as in the naive S x S
+    path).
+    """
+    B, S, H, hd = q.shape
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, S)
+    pad_q = (-S) % q_chunk
+    pad_k = (-S) % k_chunk
+    if pad_q or pad_k:
+        # fall back: shapes in this framework are powers of two; padding
+        # both streams keeps the code simple on the odd case
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Sk = S + pad_q, S + pad_k
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    scale = hd**-0.5
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, k_chunk, H, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, k_chunk, H, hd), 1, 0)
+    NEG = -1e30
+
+    def q_body(_, qi_qb):
+        qi, qb = qi_qb
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+        m0 = jnp.full((B, H, q_chunk), NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+
+        def kv_body(carry, kj_kb_vb):
+            m, l, acc = carry
+            kj, kb, vb = kj_kb_vb
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qb.astype(jnp.float32), kb.astype(jnp.float32)
+            ) * scale
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            valid = kpos[None, :] < Sk - pad_k
+            if causal:
+                valid = valid & (kpos[None, :] <= qpos[:, None])
+            s = jnp.where(valid[None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, jnp.moveaxis(out, 1, 2)  # [B, q_chunk, H, hd]
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+    return out[:, :S].astype(v.dtype)
+
+
+# attention switches to the blockwise path above this sequence length
+BLOCKWISE_THRESHOLD = 4096
+
+
+def banded_attention(q, k, v, window: int):
+    """Sliding-window causal attention with true sub-quadratic cost.
+
+    Computed chunk-wise: queries in chunk c attend keys in chunks c-1 and c
+    (chunk size = window), masked to exactly `window` history.
+    FLOPs per query: 2*window instead of S.
+    """
+    B, S, H, hd = q.shape
+    W = window
+    pad = (-S) % W
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // W
+    qc = q.reshape(B, nc, W, H, hd)
+    kc = k.reshape(B, nc, W, H, hd)
+    vc = v.reshape(B, nc, W, H, hd)
+    # keys: previous chunk + current chunk
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kc], axis=2)  # [B, nc, 2W, H, hd]
+    v2 = jnp.concatenate([v_prev, vc], axis=2)
+    qi = jnp.arange(W)[:, None] + W  # absolute index within the 2W window
+    kj = jnp.arange(2 * W)[None, :]
+    mask = (kj <= qi) & (kj > qi - W)  # exactly `window` history, causal
+    # first chunk has no previous keys
+    first_mask = mask & (jnp.arange(2 * W)[None, :] >= W)
+    masks = jnp.where(
+        (jnp.arange(nc) == 0)[:, None, None], first_mask[None], mask[None]
+    )  # [nc, W, 2W]
+    logits = jnp.einsum(
+        "bcqhd,bckhd->bchqk", qc.astype(jnp.float32), k2.astype(jnp.float32)
+    ) * (hd**-0.5)
+    logits = jnp.where(masks[None, :, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", w.astype(v2.dtype), v2)
+    out = out.reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+def chunk_local_attention(q, k, v, chunk: int):
+    """llama4-style chunk-local causal attention (no cross-chunk lookback)."""
+    B, S, H, hd = q.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // C
+    qc = q.reshape(B, nc, C, H, hd)
+    kc = k.reshape(B, nc, C, H, hd)
+    vc = v.reshape(B, nc, C, H, hd)
+    mask = _causal_mask(C, C)
+    logits = jnp.einsum(
+        "bcqhd,bckhd->bchqk", qc.astype(jnp.float32), kc.astype(jnp.float32)
+    ) * (hd**-0.5)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", w.astype(vc.dtype), vc)
+    return out.reshape(B, Sp, H, hd)[:, :S]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMode:
+    """Static attention behaviour for one layer."""
+
+    causal: bool = True
+    window: int = 0  # >0: banded sliding window
+    chunk: int = 0  # >0: chunk-local (llama4)
+
+
+def attention_apply(
+    p,
+    cfg: ModelConfig,
+    x: Array,
+    positions: Array,
+    mode: AttnMode,
+    kv: Optional[tuple[Array, Array]] = None,  # cross-attention K/V source
+) -> Array:
+    """Full-sequence attention (train/prefill). x: [B, S, D]."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if cfg.qk_norm and "q_norm" in p:
+            q = head_rms_norm(p["q_norm"], q)
+            k = head_rms_norm(p["k_norm"], k)
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    else:
+        enc = kv[0]
+        k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    if mode.window:
+        out = banded_attention(q, k, v, mode.window)
+    elif mode.chunk:
+        out = chunk_local_attention(q, k, v, mode.chunk)
+    elif (kv is None and mode.causal and cfg.blockwise_attn
+          and q.shape[1] >= BLOCKWISE_THRESHOLD):
+        out = blockwise_attention(q, k, v, True)
+    else:
+        out = full_attention(q, k, v, mode.causal)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+
+
+# -- decode path (one new token against a KV cache) -------------------------
+
+
+def attention_prefill_kv(p, cfg: ModelConfig, x: Array, positions: Array):
+    """Project and rope K/V for cache population. Returns k, v [B,S,KV,hd]."""
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm and "k_norm" in p:
+        k = head_rms_norm(p["k_norm"], k)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+    k = apply_rope(k, cos, sin)
+    return k, v
+
+
+def attention_decode(
+    p,
+    cfg: ModelConfig,
+    x: Array,  # [B, 1, D]
+    pos: Array,  # [] int32 current position
+    k_cache: Array,  # [B, S, KV, hd] (rope already applied)
+    v_cache: Array,
+    mode: AttnMode,
+) -> tuple[Array, Array, Array]:
+    """One-token decode. Returns (out [B,1,D], new k_cache, new v_cache)."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    S = k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm and "q_norm" in p:
+        q = head_rms_norm(p["q_norm"], q)
+        k_new = head_rms_norm(p["k_norm"], k_new)
+    cos, sin = rope_cos_sin(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k_new = apply_rope(k_new, cos[None], sin[None])
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0)
+    )
+    if mode.window or mode.chunk:
+        # local layer: only the last `window` cache entries matter
+        W = mode.window or mode.chunk
+        W = min(W, S)
+        start = jnp.clip(pos - W + 1, 0, S - W)
+        k_r = jax.lax.dynamic_slice_in_dim(k_cache, start, W, axis=1)
+        v_r = jax.lax.dynamic_slice_in_dim(v_cache, start, W, axis=1)
+        key_pos = start + jnp.arange(W)
+    else:
+        k_r, v_r = k_cache, v_cache
+        key_pos = jnp.arange(S)
+    valid = key_pos <= pos
+    # grouped-query einsums (NO kv-head repeat): repeating a
+    # head_dim-sharded cache blocks GSPMD's partial-contraction strategy
+    # and forces a full cache all-gather (~77 GB/step on qwen3/decode_32k
+    # before this change — EXPERIMENTS.md §Perf D.1). Contracting hd
+    # directly lets XLA psum the tiny score tensors instead.
+    B = x.shape[0]
+    KV = k_r.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    # keep the cache in its storage dtype through the dot (f32 accumulate
+    # via preferred_element_type): converting the 1 GB/layer cache to f32
+    # before the dot doubles the gather payload AND materializes a full
+    # f32 copy per layer
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(k_r.dtype), k_r,
+        preferred_element_type=jnp.float32,
+    ) * (hd**-0.5)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", w.astype(v_r.dtype), v_r,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    r = cfg.kv_lora_rank
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    hv = cfg.qk_nope_dim  # value head dim = nope dim (v2 uses 128)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _init(ks[0], (d, H, dn + dr), d**-0.5, dt),
+        "w_dkv": _init(ks[1], (d, r), d**-0.5, dt),
+        "w_krope": _init(ks[2], (d, dr), d**-0.5, dt),
+        "w_uk": _init(ks[3], (r, H, dn), r**-0.5, dt),
+        "w_uv": _init(ks[4], (r, H, hv), r**-0.5, dt),
+        "wo": _init(ks[5], (H, hv, d), (H * hv) ** -0.5, dt),
+    }
+
+
+def mla_apply(p, cfg: ModelConfig, x: Array, positions: Array) -> Array:
+    """Train/prefill MLA (expanded form). x: [B, S, D]."""
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    c_kv = x @ p["w_dkv"]  # [B, S, r]
+    k_rope = x @ p["w_krope"]  # [B, S, dr] single shared rope head
+    cos, sin = rope_cos_sin(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    scale = (dn + dr) ** -0.5
+    logits = (
+        jnp.einsum(
+            "bqhd,bkhd->bhqk", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32)
+        )
+        + jnp.einsum(
+            "bqhd,bkd->bhqk", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+        )
+    ) * scale
+    S = x.shape[1]
+    mask = _causal_mask(S, S)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+
+
+def mla_decode(
+    p,
+    cfg: ModelConfig,
+    x: Array,  # [B, 1, D]
+    pos: Array,
+    ckv_cache: Array,  # [B, S, r] compressed KV cache — the MLA memory win
+    krope_cache: Array,  # [B, S, dr]
+) -> tuple[Array, Array, Array]:
+    """Absorbed-form MLA decode: attention runs in the r-dim latent space."""
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    S = ckv_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_cos_sin(pos[None], dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[None], sin[None])
+    c_new = x @ p["w_dkv"]
+    k_rope_new = (x @ p["w_krope"])[..., None, :]
+    k_rope_new = apply_rope(k_rope_new, cos[None], sin[None])[..., 0, :]
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_new.astype(ckv_cache.dtype), (0, pos, 0)
+    )
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, k_rope_new.astype(krope_cache.dtype), (0, pos, 0)
+    )
+    # absorb w_uk into the query: q' = q_nope @ w_uk -> latent space
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), p["w_uk"].astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    logits = (
+        jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), krope_cache.astype(jnp.float32))
+    ) * scale
+    valid = jnp.arange(S) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, p["w_uv"].astype(jnp.float32))
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return out, ckv_cache, krope_cache

@@ -1,0 +1,268 @@
+"""Model dispatch + sharding rules + input specs.
+
+``build(cfg)`` returns a ``Model`` facade with init/forward/decode entry
+points routed to the decoder-only stack or the enc-dec stack.
+
+``param_pspecs`` produces a PartitionSpec pytree parallel to the params:
+2-D sharding — FSDP over the data(+pod) axes, tensor/expert parallelism
+over the model axis — following the MaxText convention (embed/ffn columns/
+attention heads/experts on 'model'; everything also sharded over 'data'
+for ZeRO-3-style weight distribution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable  # (params, batch) -> (logits, aux)
+    init_cache: Callable
+    decode_step: Callable  # (params, cache, token, pos) -> (logits, cache)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.arch_type in ("encdec", "audio"):
+        def fwd(params, batch):
+            return encdec.forward(params, cfg, batch["tokens"], batch["frames"])
+
+        def icache(params, batch, max_len):
+            B = batch["tokens"].shape[0]
+            return encdec.init_cache(params, cfg, batch["frames"], B, max_len)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            forward=fwd,
+            init_cache=icache,
+            decode_step=lambda params, cache, token, pos: encdec.decode_step(
+                params, cfg, cache, token, pos
+            ),
+        )
+
+    def fwd(params, batch):
+        return transformer.forward(
+            params, cfg, batch["tokens"], batch.get("embeds")
+        )
+
+    def icache(params, batch, max_len):
+        B = batch["tokens"].shape[0]
+        return transformer.init_cache(cfg, B, max_len)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        forward=fwd,
+        init_cache=icache,
+        decode_step=lambda params, cache, token, pos: transformer.decode_step(
+            params, cfg, cache, token, pos
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+# name-fragment -> (spec builder given (fsdp, tp), with leading L dim handled
+# by the caller). Order matters: first match wins.
+def _leaf_spec(path: str, ndim: int, fsdp, tp, shard_vocab: bool = True) -> P:
+    """Sharding rule for one parameter leaf (path is '/'-joined key names)."""
+    name = path.split("/")[-1]
+    stacked = path.startswith("layers") or "_layers" in path.split("/")[0]
+    lead = (None,) if stacked else ()
+
+    def spec(*rest):
+        return P(*lead, *rest)
+
+    if name in ("embed", "pos_embed", "enc_pos_embed"):
+        if name == "embed":
+            # vocab-sharded embed gathers CHECK-fail in XLA's SPMD
+            # partitioner inside a manual (shard_map) submesh — the qgenx
+            # mode passes shard_vocab=False (see launch/dryrun.py).
+            return P(tp, fsdp) if shard_vocab else P(None, fsdp)
+        return P(None, fsdp)
+    if name == "unembed":
+        return P(fsdp, tp)
+    if name in ("wq", "wk", "wv"):  # [D, H, hd]
+        return spec(fsdp, tp, None)
+    if name == "wo" and ndim - len(lead) == 3:  # [H, hd, D]
+        return spec(tp, None, fsdp)
+    if name == "w_dkv" or name == "w_krope":  # [D, r]
+        return spec(fsdp, None)
+    if name in ("w_uk", "w_uv"):  # [r, H, hd]
+        return spec(None, tp, None)
+    if name == "router":  # [D, E]
+        return spec(fsdp, None)
+    if name in ("wi", "wg") and ndim - len(lead) == 3:  # moe [E, D, F]
+        return spec(tp, fsdp, None)
+    if name == "wo" and ndim - len(lead) == 2 and "moe" in path and "shared" not in path:
+        return spec(tp, None)  # unreachable; moe wo is 3d
+    if name == "wo" and "moe" in path and "shared" not in path:  # [E, F, D]
+        return spec(tp, None, fsdp)
+    if name in ("wi", "wg"):  # dense mlp [D, F]
+        return spec(fsdp, tp)
+    if name == "wo":  # dense mlp [F, D]
+        return spec(tp, fsdp)
+    if name == "in_proj":  # ssm [D, in_dim]
+        return spec(fsdp, None)
+    if name == "out_proj":  # ssm [di, D]
+        return spec(None, fsdp)
+    if name == "conv_w":
+        return spec(None, None)
+    # norms, scalars-per-head, biases: replicated (tiny)
+    return P(*([None] * ndim))
+
+
+def param_pspecs(params, fsdp=("data",), tp="model", shard_vocab: bool = True):
+    """PartitionSpec tree parallel to params."""
+    fsdp_axis = fsdp if len(fsdp) > 1 else fsdp[0]
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        return _leaf_spec("/".join(keys), leaf.ndim, fsdp_axis, tp, shard_vocab)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def fit_pspecs(pspecs_tree, shapes_tree, mesh):
+    """Drop sharding on dims not divisible by their mesh-axis product.
+
+    E.g. tinyllama's 4 KV heads cannot shard over model=16 -> replicate that
+    dim (what production frameworks do for MQA/GQA KV).  For tuple axes
+    (FSDP over ('pod','data')) progressively drops leading axes.
+    """
+    def fix(spec, leaf):
+        new = []
+        for i in range(leaf.ndim):
+            ax = spec[i] if i < len(spec) else None
+            if ax is None:
+                new.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            while axes:
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                if leaf.shape[i] % size == 0:
+                    break
+                axes = axes[1:]  # drop the leading (outermost) axis
+            if not axes:
+                new.append(None)
+            elif len(axes) == 1:
+                new.append(axes[0])
+            else:
+                new.append(tuple(axes))
+        return P(*new)
+
+    return jax.tree_util.tree_map(
+        fix, pspecs_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cache_pspecs(cache, cfg: ModelConfig, dp=("data",), tp="model",
+                 shard_seq_global=False, mesh=None):
+    """Decode-cache sharding: batch over data, kv-heads over model.
+
+    ``shard_seq_global=True`` (long_500k, batch=1): shard the *feature*
+    dims — kv-heads over model AND head_dim over data.  Sequence-sharding
+    was tried first and refuted: ``dynamic_update_slice`` on a sharded
+    sequence dim makes GSPMD replicate the whole cache (an all-gather of
+    ~100 GB/step on llama4 — see EXPERIMENTS.md §Perf iteration log);
+    feature-dim sharding keeps cache updates local and turns attention
+    into cheap partial-sum psums over the tiny score vectors.
+    (fit_pspecs drops whichever entry doesn't divide, e.g. llama4's 8 kv
+    heads on a 16-way model axis.)
+    """
+    dp_axis = dp if len(dp) > 1 else dp[0]
+    tp_size = mesh.shape[tp] if mesh is not None else 0
+    kv_divides = tp_size == 0 or (cfg.num_kv_heads and cfg.num_kv_heads % tp_size == 0)
+
+    def one(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        if name in ("k", "v"):  # [L, B, S, KV, hd]
+            if shard_seq_global:
+                return P(None, None, None, tp, dp_axis)
+            # kv-heads over model when they divide; otherwise shard
+            # head_dim over model (GQA archs with few kv heads, e.g.
+            # llama4's 8 heads on a 16-way axis, would otherwise
+            # replicate a multi-GB cache per device)
+            if kv_divides:
+                return P(None, dp_axis, None, tp, None)
+            return P(None, dp_axis, None, None, tp)
+        if name in ("cross_k", "cross_v"):  # [L, B, T, KV, hd]
+            return P(None, dp_axis, None, tp, None)
+        if name in ("ckv", "krope"):  # [L, B, S, r] — MLA latent cache
+            if shard_seq_global:
+                return P(None, None, dp_axis, tp)
+            # latent dim over model: the absorbed-form attention contracts
+            # r, so XLA partial-sums the scores (cheap psum) instead of
+            # holding a replicated 18+ GiB cache per device
+            return P(None, dp_axis, None, tp)
+        if name == "ssm_h":  # [L, B, H, P, N]
+            return P(None, dp_axis, tp, None, None)
+        if name == "conv":  # [L, B, K-1, conv_dim]
+            return P(None, dp_axis, None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Model inputs for one (arch, shape) pair as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    out: dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = tok
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = tok
+    else:  # decode: one token against a cache of length S
+        out["token"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.arch_type in ("encdec", "audio") and shape.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    if cfg.arch_type == "vlm" and shape.kind != "decode":
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, dp=("data",)) -> dict[str, P]:
+    dp_axis = dp if len(dp) > 1 else dp[0]
+    specs: dict[str, P] = {}
+    if shape.kind == "train":
+        specs = {"tokens": P(dp_axis, None), "labels": P(dp_axis, None)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": P(dp_axis, None)}
+    else:
+        dp_for_batch = dp_axis if shape.global_batch > 1 else None
+        specs = {"token": P(dp_for_batch), "pos": P()}
+    if cfg.arch_type in ("encdec", "audio") and shape.kind != "decode":
+        specs["frames"] = P(dp_axis, None, None)
+    if cfg.arch_type == "vlm" and shape.kind != "decode":
+        specs["embeds"] = P(dp_axis, None, None)
+    return specs

@@ -1,0 +1,109 @@
+"""Mixture-of-experts layer with capacity-based token dispatch.
+
+GShard/Switch-style routing adapted for TPU expert parallelism: experts are
+stacked ``[E, ...]`` and sharded over the ``model`` mesh axis; tokens are
+scatter-dispatched into per-expert capacity buffers (``[E, C, D]``) so the
+expert matmuls are dense einsums with *active-expert* FLOPs (tokens * top_k
+* capacity_factor), not all-expert FLOPs.  The scatter/gather across the
+expert-sharded dimension lowers to the canonical MoE ``all_to_all`` pattern
+under GSPMD — the collective the roofline tracks for the MoE archs.
+
+Supports shared experts (DeepSeek-V2: always-on dense experts alongside the
+routed ones) and top-1 (llama4/Switch) through top-k routing.
+
+Auxiliary load-balance loss (Switch §4) is returned for the train loop.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, _init, mlp_apply, mlp_init
+from repro.models.sharding import constrain_expert_buffer
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p = {
+        "router": _init(ks[0], (d, E), d**-0.5, jnp.float32),
+        "wi": _init(ks[1], (E, d, f), d**-0.5, dt),
+        "wo": _init(ks[2], (E, f, d), f**-0.5, dt),
+    }
+    if gated:
+        p["wg"] = _init(ks[3], (E, d, f), d**-0.5, dt)
+    if cfg.num_shared_experts:
+        import dataclasses as _dc
+
+        shared_cfg = _dc.replace(cfg, d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+        p["shared"] = mlp_init(ks[4], shared_cfg, shared_cfg.d_ff)
+    return p
+
+
+def moe_apply(p, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Switch load-balance auxiliary loss
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1), axis=0
+    )  # fraction of tokens per expert
+    aux_loss = E * jnp.sum(me * ce)
+
+    capacity = int(max(1, round(T * K / E * cfg.capacity_factor)))
+
+    # slot assignment: position of each (token, k) within its expert queue
+    flat_expert = expert_idx.reshape(-1)  # [T*K]
+    flat_gate = gate_vals.reshape(-1)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # [T*K, E]
+    slot = jnp.cumsum(onehot, axis=0) * onehot  # rank within expert (1-based)
+    flat_slot = jnp.sum(slot, axis=-1) - 1  # [T*K]
+    keep = flat_slot < capacity
+    flat_gate = jnp.where(keep, flat_gate, 0.0)
+    flat_slot = jnp.clip(flat_slot, 0, capacity - 1)
+
+    token_of = jnp.repeat(jnp.arange(T), K)
+    # dispatch: expert buffers [E, C, D]
+    buf = jnp.zeros((E, capacity, D), x.dtype)
+    buf = buf.at[flat_expert, flat_slot].add(
+        jnp.where(keep[:, None], xt[token_of], 0).astype(x.dtype)
+    )
+
+    # expert computation (dense einsums over stacked experts)
+    buf = constrain_expert_buffer(buf)  # expert-parallel over 'model'
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    if "wg" in p:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * h
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])  # [E, C, D]
+
+    # combine: gather each (token, k) result and weight by its gate
+    gathered = out_buf[flat_expert, flat_slot]  # [T*K, D]
+    weighted = gathered.astype(jnp.float32) * flat_gate[:, None]
+    out = jnp.zeros((T, D), jnp.float32).at[token_of].add(weighted)
+    out = out.astype(x.dtype)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], xt, cfg.mlp_type)
+    return out.reshape(B, S, D), aux_loss

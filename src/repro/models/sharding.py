@@ -1,0 +1,90 @@
+"""Activation sharding constraints.
+
+GSPMD needs anchor points: without them it propagates the *weight*
+shardings into activations (e.g. embed's FSDP dim shards the hidden dim
+over 'data' and replicates batch — catastrophic for the collective term).
+These helpers pin the canonical layout — batch over data(+pod), hidden
+replicated, heads/experts over model — wherever a mesh context is active,
+and are no-ops on plain single-device CPU (smoke tests).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ctx_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not mesh.axis_names:
+        return None
+    return mesh
+
+
+def _axis_size(mesh, entry) -> int:
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *entries):
+    """with_sharding_constraint(x, P(*entries)) if mesh axes exist & divide."""
+    mesh = _ctx_axes()
+    if mesh is None:
+        return x
+    fixed = []
+    names = _auto_axes(mesh)
+    for i, e in enumerate(entries):
+        if e is None:
+            fixed.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        if not set(axes).issubset(names) or x.shape[i] % _axis_size(mesh, e):
+            fixed.append(None)
+        else:
+            fixed.append(e)
+    if all(f is None for f in fixed):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def _auto_axes(mesh):
+    """Mesh axes still under automatic partitioning (constraints may only
+    reference these — inside shard_map the manual axes are already bound)."""
+    try:
+        types = dict(zip(mesh.axis_names, mesh.axis_types))
+    except Exception:
+        return set(mesh.axis_names)
+    return {a for a, t in types.items() if "Manual" not in str(t)}
+
+
+def dp_entry():
+    """('pod','data') / 'data' — whichever exists (and is auto) in the mesh."""
+    mesh = _ctx_axes()
+    if mesh is None:
+        return None
+    auto = _auto_axes(mesh)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names and a in auto)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain_bsd(x):
+    """[B, S, D] activations: batch over data axes, rest replicated."""
+    return constrain(x, dp_entry(), None, None)
+
+
+def constrain_bshd(x):
+    """[B, S, H, hd]: batch over data, heads over model."""
+    return constrain(x, dp_entry(), None, "model", None)
+
+
+def constrain_expert_buffer(x):
+    """[E, C, D] MoE dispatch buffers: experts over model."""
+    return constrain(x, "model", None, None)

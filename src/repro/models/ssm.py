@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Implements the chunked SSD algorithm for train/prefill (block decomposition
+of the semiseparable matrix: intra-chunk dense + inter-chunk recurrence via
+``lax.scan`` over chunks) and the O(1)-state recurrent step for decode —
+the reason the SSM archs run the ``long_500k`` shape.
+
+Layout follows the reference Mamba-2: input projection produces
+(z, x, B, C, dt); depthwise causal conv over (x, B, C); scalar-per-head
+decay ``a_t = exp(dt * A)``; heads of size P with state size N.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, _init
+
+Array = jax.Array
+
+
+def ssm_dims(cfg: ModelConfig):
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_num_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    conv_dim = di + 2 * G * N
+    return di, H, P, N, G, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, H, P, N, G, conv_dim = ssm_dims(cfg)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * G * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": _init(ks[0], (d, in_dim), d**-0.5, dt),
+        "conv_w": _init(ks[1], (cfg.ssm_conv_width, conv_dim), 0.5, jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) in (-inf, 0)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[2], (di, d), di**-0.5, dt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    di, H, P, N, G, _ = ssm_dims(cfg)
+    z, xBC_dt = jnp.split(proj, [di], axis=-1)
+    xBC, dt = jnp.split(xBC_dt, [di + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along S. xBC [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a_cs: Array) -> Array:
+    """L[i,j] = exp(sum_{j<k<=i} loga_k) lower-triangular from cumsum a_cs."""
+    # a_cs: [..., Q] cumulative sum of log-decays within chunk
+    diff = a_cs[..., :, None] - a_cs[..., None, :]
+    Q = a_cs.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(cfg: ModelConfig, xh: Array, dt: Array, Bm: Array, Cm: Array, A: Array, h0=None):
+    """Chunked SSD. xh [B,S,H,P]; dt [B,S,H]; Bm/Cm [B,S,G,N]; A [H] (<0).
+
+    Returns (y [B,S,H,P], final state [B,H,P,N]).
+    """
+    Bsz, S, H, P = xh.shape
+    _, _, _, N, G, _ = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    # compute dtype for the O(S*Q)-sized intermediates (L, CB, dx):
+    # bf16 on TPU halves the dominant HBM traffic of the SSD block
+    # (decays/cumsums/state carry stay f32 for stability) — §Perf iter 2.
+    cdt = jnp.dtype(cfg.dtype)
+    # reshape into chunks
+    xc = xh.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, G, N).astype(jnp.float32)
+    # broadcast groups to heads
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3).astype(cdt)  # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3).astype(cdt)
+    loga = dtc * A[None, None, None, :]  # [B,nc,Q,H] (negative)
+    loga_cs = jnp.cumsum(loga, axis=2)
+    # intra-chunk (diagonal blocks): Y = (L o (C B^T)) (dt x)
+    L = _segsum(jnp.moveaxis(loga_cs, -1, 2)).astype(cdt)  # [B,nc,H,Q,Q]
+    CB = jnp.einsum(
+        "bcqhn,bckhn->bchqk", Ch, Bh, preferred_element_type=cdt
+    )
+    dx = (dtc[..., None] * xc).astype(cdt)  # [B,nc,Q,H,P]
+    y_diag = jnp.einsum(
+        "bchqk,bckhp->bcqhp", CB * L, dx, preferred_element_type=jnp.float32
+    )
+    # chunk states: h_c = sum_k a(Q..k) B_k dx_k
+    decay_states = jnp.exp(loga_cs[:, :, -1:, :] - loga_cs)  # [B,nc,Q,H]
+    states = jnp.einsum(
+        "bcqhn,bcqh,bcqhp->bchpn", Bh.astype(jnp.float32), decay_states,
+        dx.astype(jnp.float32),
+    )
+    # inter-chunk recurrence over chunks
+    chunk_decay = jnp.exp(loga_cs[:, :, -1, :])  # [B,nc,H]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(h, inputs):
+        st, dec = inputs  # st [B,H,P,N], dec [B,H]
+        h_prev = h
+        h = h * dec[:, :, None, None] + st
+        return h, h_prev
+
+    sts = jnp.moveaxis(states, 1, 0)  # [nc,B,H,P,N]
+    decs = jnp.moveaxis(chunk_decay, 1, 0)  # [nc,B,H]
+    h_final, h_prevs = jax.lax.scan(body, h0, (sts, decs))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # [B,nc,H,P,N] state entering chunk
+    # inter-chunk contribution: y += C_q a(q) h_prev
+    state_decay = jnp.exp(loga_cs)  # decay from chunk start to position q
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Ch.astype(jnp.float32), h_prevs, state_decay
+    )
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def ssm_apply(p, cfg: ModelConfig, x: Array, h0=None, conv_state=None):
+    """Full-sequence SSM block. x [B,S,D] -> (y [B,S,D], (h, conv_state))."""
+    di, H, P, N, G, conv_dim = ssm_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC.astype(jnp.float32), p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    Bsz, S, _ = x.shape
+    xh = xs.reshape(Bsz, S, H, P)
+    Bm = Bm.reshape(Bsz, S, G, N)
+    Cm = Cm.reshape(Bsz, S, G, N)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_scan(cfg, xh, dt_s, Bm, Cm, A, h0)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    # gated rmsnorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = y.astype(x.dtype) @ p["out_proj"]
+    new_conv = None
+    if conv_state is not None:
+        K = cfg.ssm_conv_width
+        raw = (x @ p["in_proj"])  # recompute tail pre-conv activations
+        _, xBC_raw, _ = _split_proj(cfg, raw)
+        new_conv = xBC_raw[:, -(K - 1) :, :].astype(jnp.float32)
+    return out, (h, new_conv)
+
+
+def ssm_decode(p, cfg: ModelConfig, x: Array, h: Array, conv_state: Array):
+    """One-token recurrence. x [B,1,D]; h [B,H,P,N]; conv_state [B,K-1,conv_dim].
+
+    Returns (y [B,1,D], new h, new conv_state).
+    """
+    di, H, P, N, G, conv_dim = ssm_dims(cfg)
+    K = cfg.ssm_conv_width
+    proj = x @ p["in_proj"]  # [B,1,*]
+    z, xBC, dt = _split_proj(cfg, proj)
+    # conv: window = conv_state (K-1 prev) + current
+    win = jnp.concatenate([conv_state, xBC.astype(jnp.float32)], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = win[:, 1:, :]
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + G * N], axis=-1)
+    Bsz = x.shape[0]
+    xh = xs.reshape(Bsz, H, P)
+    Bm = Bm.reshape(Bsz, G, N)
+    Cm = Cm.reshape(Bsz, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # [B,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt_s = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dt_s * (-jnp.exp(p["A_log"]))[None, :])  # [B,H]
+    h_new = h * a[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xh.astype(jnp.float32), Bh, dt_s
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, h_new, new_conv

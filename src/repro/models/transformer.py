@@ -1,0 +1,344 @@
+"""Decoder-only transformer assembly: dense / MoE / MLA / SSM / hybrid.
+
+Layer heterogeneity (gemma3's 5:1 local:global attention, llama4's 3:1
+chunk-local:global + MoE-every-other-layer) is expressed as a repeating
+*pattern* of period ``lcm(global_every, moe_every)``: layers are stacked
+per pattern-position (``params["layers"][j]`` holds every layer at offset
+``j`` within its period, stacked over periods) and iterated with one
+``jax.lax.scan`` over periods whose body unrolls the period with *static*
+(is_moe, is_global) flags — exact FLOPs (no both-branch selects), bounded
+HLO size, bounded compile time.  Remainder layers (num_layers % period)
+live in ``params["layers_tail"]`` and run unscanned.
+
+Entry points:
+  forward(params, cfg, tokens, extra_embeds)  -> (logits, aux)   train/prefill
+  init_cache(cfg, batch, max_len)             -> cache pytree    decode
+  decode_step(params, cfg, cache, token, pos) -> (logits, cache) decode
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.sharding import constrain, constrain_bsd, dp_entry
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+
+
+def layer_pattern(cfg: ModelConfig):
+    """(period, flags, n_periods, n_rem); flags[j] = (is_moe, is_global)."""
+    has_window = bool(cfg.sliding_window or cfg.chunked_window)
+    ge = cfg.global_every if (has_window and cfg.global_every) else 1
+    me = cfg.moe_every if cfg.num_experts else 1
+    period = math.lcm(ge, me)
+    flags = []
+    for j in range(period):
+        is_moe = bool(cfg.num_experts) and (j % me == me - 1)
+        if not has_window:
+            is_global = True
+        else:
+            is_global = cfg.global_every > 0 and (j % ge == ge - 1)
+        flags.append((is_moe, is_global))
+    n_periods = cfg.num_layers // period
+    n_rem = cfg.num_layers - n_periods * period
+    return period, flags, n_periods, n_rem
+
+
+def _has_attention(cfg: ModelConfig) -> bool:
+    return cfg.arch_type != "ssm"
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    return cfg.arch_type in ("ssm", "hybrid")
+
+
+def _layer_at(tree, j: int):
+    return jax.tree_util.tree_map(lambda a: a[j], tree)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg: ModelConfig, is_moe: bool):
+    ks = iter(jax.random.split(key, 8))
+    p = {}
+    if _has_attention(cfg):
+        p["ln_attn"] = L.norm_init(cfg)
+        if cfg.kv_lora_rank:
+            p["attn"] = L.mla_init(next(ks), cfg)
+        else:
+            p["attn"] = L.attention_init(next(ks), cfg)
+    if _has_ssm(cfg):
+        p["ln_ssm"] = L.norm_init(cfg)
+        p["ssm"] = SSM.ssm_init(next(ks), cfg)
+    if is_moe:
+        p["ln_mlp"] = L.norm_init(cfg)
+        p["moe"] = MOE.moe_init(next(ks), cfg)
+    elif cfg.d_ff > 0:
+        p["ln_mlp"] = L.norm_init(cfg)
+        p["mlp"] = L.mlp_init(next(ks), cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    period, flags, n_periods, n_rem = layer_pattern(cfg)
+    k_embed, k_layers, k_tail, k_out = jax.random.split(key, 4)
+    stacks = []
+    if n_periods:
+        for j in range(period):
+            keys = jax.random.split(jax.random.fold_in(k_layers, j), n_periods)
+            stacks.append(
+                jax.vmap(lambda k: layer_init(k, cfg, flags[j][0]))(keys)
+            )
+    tail = []
+    for r in range(n_rem):
+        jj = r % period  # pattern continues through the tail
+        tail.append(layer_init(jax.random.fold_in(k_tail, r), cfg, flags[jj][0]))
+    p = {
+        "embed": L._init(k_embed, (cfg.vocab_size, cfg.d_model), 1.0, jnp.float32),
+        "layers": tuple(stacks),
+        "layers_tail": tuple(tail),
+        "ln_f": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._init(
+            k_out, (cfg.d_model, cfg.vocab_size), cfg.d_model**-0.5, jnp.float32
+        )
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block application (one layer)
+# ---------------------------------------------------------------------------
+
+
+def _attn_mode(cfg: ModelConfig, is_global: bool) -> L.AttnMode:
+    if is_global or not (cfg.sliding_window or cfg.chunked_window):
+        return L.AttnMode(causal=True)
+    if cfg.chunked_window:
+        return L.AttnMode(causal=True, chunk=cfg.sliding_window)
+    return L.AttnMode(causal=True, window=cfg.sliding_window)
+
+
+def block_apply(p, cfg: ModelConfig, x: Array, positions: Array, is_moe: bool, is_global: bool):
+    """Train/prefill block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = constrain_bsd(x)  # pin [B('data'), S, D] against GSPMD drift
+    if _has_attention(cfg) and _has_ssm(cfg):
+        # hybrid (hymba): attention and SSM heads in parallel on the same
+        # normalized input; outputs averaged (arXiv:2411.13676 §2.1)
+        h = L.norm_apply(p["ln_attn"], x, cfg.norm_type)
+        a = L.attention_apply(p["attn"], cfg, h, positions, _attn_mode(cfg, is_global))
+        s, _ = SSM.ssm_apply(p["ssm"], cfg, h)
+        x = x + 0.5 * (a + s)
+    elif _has_attention(cfg):
+        h = L.norm_apply(p["ln_attn"], x, cfg.norm_type)
+        if cfg.kv_lora_rank:
+            a = L.mla_apply(p["attn"], cfg, h, positions)
+        else:
+            a = L.attention_apply(
+                p["attn"], cfg, h, positions, _attn_mode(cfg, is_global)
+            )
+        x = x + a
+    elif _has_ssm(cfg):
+        h = L.norm_apply(p["ln_ssm"], x, cfg.norm_type)
+        s, _ = SSM.ssm_apply(p["ssm"], cfg, h)
+        x = x + s
+    if is_moe:
+        h = L.norm_apply(p["ln_mlp"], x, cfg.norm_type)
+        m, aux = MOE.moe_apply(p["moe"], cfg, h)
+        x = x + m
+    elif cfg.d_ff > 0:
+        h = L.norm_apply(p["ln_mlp"], x, cfg.norm_type)
+        x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_type)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: Array, extra_embeds=None):
+    if cfg.onehot_embed:
+        oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=jnp.dtype(cfg.dtype))
+        x = oh @ params["embed"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x * (cfg.d_model**0.5)
+    if extra_embeds is not None and cfg.num_prefix_embeds:
+        # early fusion: overwrite the first P positions with modality embeds
+        pe = extra_embeds.astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, cfg.num_prefix_embeds :, :]], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens: Array, extra_embeds=None):
+    """tokens [B, S] -> (logits [B, S, V], aux_loss)."""
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens, extra_embeds)
+    x = constrain_bsd(x)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    period, flags, n_periods, n_rem = layer_pattern(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    if n_periods:
+        def body(carry, lp_tuple):
+            x, aux = carry
+            for j in range(period):
+                x, a = block_apply(lp_tuple[j], cfg, x, positions, *flags[j])
+                aux = aux + a
+            return (x, aux), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+    for r, lp in enumerate(params["layers_tail"]):
+        x, a = block_apply(lp, cfg, x, positions, *flags[r % period])
+        aux = aux + a
+
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    x = constrain_bsd(x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), params["embed"])
+    else:
+        logits = x.astype(jnp.float32) @ params["unembed"]
+    logits = constrain(logits, dp_entry(), None, "model")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache / SSM state)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode-state pytree (uniform across layers). Dtype: model dtype."""
+    Ln = cfg.num_layers
+    dt = jnp.dtype(cfg.dtype)
+    cache = {}
+    if _has_attention(cfg):
+        if cfg.kv_lora_rank:
+            cache["ckv"] = jnp.zeros((Ln, batch, max_len, cfg.kv_lora_rank), dt)
+            cache["krope"] = jnp.zeros((Ln, batch, max_len, cfg.qk_rope_dim), dt)
+        else:
+            hd = cfg.resolved_head_dim
+            cache["k"] = jnp.zeros((Ln, batch, max_len, cfg.num_kv_heads, hd), dt)
+            cache["v"] = jnp.zeros((Ln, batch, max_len, cfg.num_kv_heads, hd), dt)
+    if _has_ssm(cfg):
+        H, P, N = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+        _, _, _, _, _, conv_dim = SSM.ssm_dims(cfg)
+        cache["ssm_h"] = jnp.zeros((Ln, batch, H, P, N), jnp.float32)
+        cache["conv"] = jnp.zeros((Ln, batch, cfg.ssm_conv_width - 1, conv_dim), jnp.float32)
+    return cache
+
+
+def decode_block(p, cfg: ModelConfig, x, pos, layer_cache, is_moe: bool, is_global: bool):
+    new_cache = dict(layer_cache)
+    if _has_attention(cfg) and _has_ssm(cfg):
+        h = L.norm_apply(p["ln_attn"], x, cfg.norm_type)
+        a, k, v = L.attention_decode(
+            p["attn"], cfg, h, pos, layer_cache["k"], layer_cache["v"],
+            _attn_mode(cfg, is_global),
+        )
+        s, h_new, conv = SSM.ssm_decode(p["ssm"], cfg, h, layer_cache["ssm_h"], layer_cache["conv"])
+        new_cache.update(k=k, v=v, ssm_h=h_new, conv=conv)
+        x = x + 0.5 * (a + s)
+    elif _has_attention(cfg):
+        h = L.norm_apply(p["ln_attn"], x, cfg.norm_type)
+        if cfg.kv_lora_rank:
+            a, ckv, krope = L.mla_decode(
+                p["attn"], cfg, h, pos, layer_cache["ckv"], layer_cache["krope"]
+            )
+            new_cache.update(ckv=ckv, krope=krope)
+        else:
+            a, k, v = L.attention_decode(
+                p["attn"], cfg, h, pos, layer_cache["k"], layer_cache["v"],
+                _attn_mode(cfg, is_global),
+            )
+            new_cache.update(k=k, v=v)
+        x = x + a
+    elif _has_ssm(cfg):
+        h = L.norm_apply(p["ln_ssm"], x, cfg.norm_type)
+        s, h_new, conv = SSM.ssm_decode(p["ssm"], cfg, h, layer_cache["ssm_h"], layer_cache["conv"])
+        new_cache.update(ssm_h=h_new, conv=conv)
+        x = x + s
+    if is_moe:
+        h = L.norm_apply(p["ln_mlp"], x, cfg.norm_type)
+        m, _ = MOE.moe_apply(p["moe"], cfg, h)
+        x = x + m
+    elif cfg.d_ff > 0:
+        h = L.norm_apply(p["ln_mlp"], x, cfg.norm_type)
+        x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_type)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token: Array, pos: Array):
+    """token [B] int32, pos [] int32 -> (logits [B, V], new cache)."""
+    x = params["embed"][token][:, None, :].astype(jnp.dtype(cfg.dtype))
+    x = x * (cfg.d_model**0.5)
+    period, flags, n_periods, n_rem = layer_pattern(cfg)
+
+    new_cache = cache
+    if n_periods:
+        main_cache = jax.tree_util.tree_map(
+            lambda a: a[: n_periods * period].reshape(
+                n_periods, period, *a.shape[1:]
+            ),
+            cache,
+        )
+
+        def body(x, inputs):
+            lp_tuple, lc_group = inputs
+            ncs = []
+            for j in range(period):
+                x, nc = decode_block(
+                    lp_tuple[j], cfg, x, pos, _layer_at(lc_group, j), *flags[j]
+                )
+                ncs.append(nc)
+            stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ncs)
+            return x, stacked
+
+        x, new_main = jax.lax.scan(body, x, (params["layers"], main_cache))
+        new_cache = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_periods * period, *a.shape[2:]), new_main
+        )
+    if n_rem:
+        tail_cache = jax.tree_util.tree_map(lambda a: a[n_periods * period :], cache)
+        ncs = []
+        for r, lp in enumerate(params["layers_tail"]):
+            x, nc = decode_block(
+                lp, cfg, x, pos, _layer_at(tail_cache, r), *flags[r % period]
+            )
+            ncs.append(nc)
+        tail_stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ncs)
+        if n_periods:
+            new_cache = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), new_cache, tail_stacked
+            )
+        else:
+            new_cache = tail_stacked
+
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), params["embed"])
+    else:
+        logits = x.astype(jnp.float32) @ params["unembed"]
+    return logits[:, 0], new_cache

@@ -1,0 +1,134 @@
+"""Optimizers for model-scale training.
+
+The paper's *experimental* instantiation (Section 5) is ExtraAdam (Gidel et
+al. 2019) with unbiased gradient compression on the exchange; the *theory*
+template (Q-GenX proper) lives in :mod:`repro.core.extragradient`.  Here we
+provide the trainer-facing family:
+
+* ``adam``       — baseline (1 oracle call / step)
+* ``extra_adam`` — extrapolation to params_half using the current Adam
+  direction, second gradient at params_half commits the update
+  (2 oracle calls / step — the DE pattern of Example 3.2)
+* ``optimistic_adam`` — reuses the previous half-step gradient as the
+  extrapolation direction (1 oracle call / step — OptDA, Example 3.3)
+
+All states are plain pytrees; dtypes follow MaxText practice (f32 master
+moments, bf16 params supported).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "extra_adam"  # adam | extra_adam | optimistic_adam
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+class AdamState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: Array
+    prev_half_grad: Optional[dict]  # optimistic variant only
+
+
+def init_state(cfg: OptimizerConfig, params) -> AdamState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    prev = (
+        jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if cfg.name == "optimistic_adam"
+        else None
+    )
+    return AdamState(
+        mu=zeros,
+        nu=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        count=jnp.zeros((), jnp.int32),
+        prev_half_grad=prev,
+    )
+
+
+def _clip(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    gn = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree_util.tree_leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def _adam_direction(cfg: OptimizerConfig, mu, nu, count):
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**c
+    bc2 = 1.0 - cfg.b2**c
+    return jax.tree_util.tree_map(
+        lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps), mu, nu
+    )
+
+
+def _update_moments(cfg: OptimizerConfig, grads, mu, nu):
+    mu = jax.tree_util.tree_map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g.astype(jnp.float32), mu, grads
+    )
+    nu = jax.tree_util.tree_map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+        nu,
+        grads,
+    )
+    return mu, nu
+
+
+def _apply(cfg: OptimizerConfig, params, direction):
+    def one(p, d):
+        new = p.astype(jnp.float32) - cfg.lr * d
+        if cfg.weight_decay:
+            new = new - cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new.astype(p.dtype)
+
+    return jax.tree_util.tree_map(one, params, direction)
+
+
+def extrapolate(cfg: OptimizerConfig, params, state: AdamState, grads):
+    """First half of ExtraAdam: tentative step to params_half.
+
+    Moments are NOT committed (lookahead uses in-flight statistics).
+    """
+    grads = _clip(grads, cfg.grad_clip)
+    mu, nu = _update_moments(cfg, grads, state.mu, state.nu)
+    direction = _adam_direction(cfg, mu, nu, state.count + 1)
+    return _apply(cfg, params, direction)
+
+
+def commit(cfg: OptimizerConfig, params, state: AdamState, grads_half):
+    """Second half: update from the gradient at the extrapolated point."""
+    grads_half = _clip(grads_half, cfg.grad_clip)
+    mu, nu = _update_moments(cfg, grads_half, state.mu, state.nu)
+    count = state.count + 1
+    direction = _adam_direction(cfg, mu, nu, count)
+    new_params = _apply(cfg, params, direction)
+    prev = (
+        jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads_half)
+        if state.prev_half_grad is not None
+        else None
+    )
+    return new_params, AdamState(mu=mu, nu=nu, count=count, prev_half_grad=prev)
+
+
+def adam_step(cfg: OptimizerConfig, params, state: AdamState, grads):
+    """Plain Adam (baseline)."""
+    return commit(cfg, params, state, grads)

@@ -1,0 +1,98 @@
+"""Tests for QAda level optimization (Section 3.3)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive_levels import (
+    expected_variance,
+    gradient_descent_levels,
+    merge_histograms,
+    normalized_coord_histogram,
+    optimize_levels,
+    symbol_probabilities,
+)
+from repro.core.quantization import (
+    QuantConfig,
+    bucket_norms,
+    empirical_variance_multiplier,
+    exponential_levels,
+    uniform_levels,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _gaussian_hist(seed=0, n=1 << 15, bucket=1024):
+    v = jnp.array(np.random.RandomState(seed).randn(n), jnp.float32)
+    v2d = v.reshape(-1, bucket)
+    norms = bucket_norms(v2d, math.inf)
+    return v, normalized_coord_histogram(v2d, norms)
+
+
+def test_histogram_mass():
+    _, hist = _gaussian_hist()
+    assert float(jnp.sum(hist)) > 0
+    assert hist.shape == (2048,)
+
+
+def test_optimize_reduces_variance():
+    """QAda's whole point: optimized levels beat heuristic ones on the
+    empirical objective AND on true Monte-Carlo quantization error."""
+    v, hist = _gaussian_hist()
+    s = 7
+    lv0 = uniform_levels(s)
+    lv_opt = optimize_levels(lv0, hist)
+    assert float(expected_variance(lv_opt, hist)) < float(expected_variance(lv0, hist))
+    # strictly increasing, endpoints fixed
+    lvn = np.asarray(lv_opt)
+    assert lvn[0] == 0.0 and lvn[-1] == 1.0
+    assert np.all(np.diff(lvn) > 0)
+    # true Monte-Carlo error also drops
+    cfg = QuantConfig(num_levels=s, q_norm=math.inf, bucket_size=1024)
+    e0 = empirical_variance_multiplier(v, lv0, cfg, KEY, trials=16)
+    e1 = empirical_variance_multiplier(v, lv_opt, cfg, KEY, trials=16)
+    assert e1 < e0
+
+
+def test_optimize_beats_exponential_for_gaussian():
+    v, hist = _gaussian_hist(seed=3)
+    s = 7
+    lv_exp = exponential_levels(s)
+    lv_opt = optimize_levels(uniform_levels(s), hist)
+    cfg = QuantConfig(num_levels=s, q_norm=math.inf, bucket_size=1024)
+    e_exp = empirical_variance_multiplier(v, lv_exp, cfg, KEY, trials=16)
+    e_opt = empirical_variance_multiplier(v, lv_opt, cfg, KEY, trials=16)
+    assert e_opt < e_exp * 1.05  # at least on par; generally better
+
+
+def test_gradient_descent_variant_agrees():
+    _, hist = _gaussian_hist(seed=5)
+    s = 5
+    lv_cd = optimize_levels(uniform_levels(s), hist)
+    lv_gd = gradient_descent_levels(uniform_levels(s), hist, steps=400, lr=0.02)
+    v_cd = float(expected_variance(lv_cd, hist))
+    v_gd = float(expected_variance(lv_gd, hist))
+    v_0 = float(expected_variance(uniform_levels(s), hist))
+    assert v_cd < v_0 and v_gd < v_0
+    # the two solvers land in the same ballpark
+    assert v_gd < v_cd * 2.0
+
+
+def test_merge_histograms_is_sum():
+    _, h1 = _gaussian_hist(seed=1)
+    _, h2 = _gaussian_hist(seed=2)
+    m = merge_histograms(h1, h2)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(h1 + h2), rtol=1e-6)
+
+
+def test_symbol_probabilities_sum_to_one():
+    _, hist = _gaussian_hist(seed=7)
+    for s in (3, 7, 15):
+        p = symbol_probabilities(uniform_levels(s), hist)
+        assert p.shape == (s + 2,)
+        np.testing.assert_allclose(float(jnp.sum(p)), 1.0, rtol=1e-4)
+        assert np.all(np.asarray(p) >= 0)

@@ -1,0 +1,101 @@
+"""Tests for the coding layer (Theorem 2, Appendix K)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding
+from repro.core.adaptive_levels import normalized_coord_histogram, symbol_probabilities
+from repro.core.quantization import (
+    QuantConfig,
+    bucket_norms,
+    quantize,
+    uniform_levels,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_entropy_basics():
+    assert coding.entropy_bits(np.array([0.5, 0.5])) == pytest.approx(1.0)
+    assert coding.entropy_bits(np.array([1.0, 0.0])) == pytest.approx(0.0)
+
+
+def test_elias_gamma_lengths():
+    assert coding.elias_gamma_length(1) == 1
+    assert coding.elias_gamma_length(2) == 3
+    assert coding.elias_gamma_length(4) == 5
+
+
+def test_huffman_is_prefix_free_and_near_entropy():
+    p = np.array([0.55, 0.2, 0.1, 0.08, 0.05, 0.02])
+    codes = coding.huffman_code(p)
+    words = list(codes.values())
+    for i, a in enumerate(words):
+        for j, b in enumerate(words):
+            if i != j:
+                assert not b.startswith(a)
+    exp_len = sum(p[k] * len(codes[k]) for k in codes)
+    H = coding.entropy_bits(p)
+    assert H <= exp_len <= H + 1  # Theorem 7 (Cover & Thomas)
+
+
+def _quantized_sample(s=7, n=4096, bucket=1024, seed=0):
+    cfg = QuantConfig(num_levels=s, q_norm=math.inf, bucket_size=bucket)
+    levels = uniform_levels(s)
+    v = jnp.array(np.random.RandomState(seed).randn(n), jnp.float32)
+    qt = quantize(v, levels, KEY, cfg)
+    signed_idx = np.asarray(qt.payload, dtype=np.int64)
+    return signed_idx, np.asarray(qt.norms), levels, v
+
+
+def test_bit_exact_roundtrip_elias():
+    signed_idx, norms, _, _ = _quantized_sample()
+    data, nbits = coding.encode(signed_idx, norms, method="elias")
+    got_idx, got_norms = coding.decode(
+        data, nbits, len(signed_idx), len(norms), method="elias"
+    )
+    np.testing.assert_array_equal(got_idx, signed_idx)
+    np.testing.assert_array_equal(got_norms, norms)
+
+
+def test_bit_exact_roundtrip_huffman():
+    signed_idx, norms, levels, v = _quantized_sample(seed=3)
+    # estimate probabilities from the QAda sufficient statistics
+    v2d = v.reshape(-1, 1024)
+    hist = normalized_coord_histogram(v2d, bucket_norms(v2d, math.inf))
+    p = np.asarray(symbol_probabilities(levels, hist), dtype=np.float64)
+    p = np.maximum(p, 1e-9)
+    codes = coding.huffman_code(p)
+    data, nbits = coding.encode(signed_idx, norms, method="huffman", codes=codes)
+    got_idx, got_norms = coding.decode(
+        data, nbits, len(signed_idx), len(norms), method="huffman", codes=codes
+    )
+    np.testing.assert_array_equal(got_idx, signed_idx)
+    np.testing.assert_array_equal(got_norms, norms)
+
+
+def test_theorem2_bound_holds_empirically():
+    """Actual Huffman-coded length <= Theorem 2 bound; and beats fixed int8."""
+    signed_idx, norms, levels, v = _quantized_sample(s=7, n=1 << 14, seed=5)
+    v2d = v.reshape(-1, 1024)
+    hist = normalized_coord_histogram(v2d, bucket_norms(v2d, math.inf))
+    p = np.asarray(symbol_probabilities(levels, hist), dtype=np.float64)
+    p = np.maximum(p, 1e-12)
+    p = p / p.sum()
+    codes = coding.huffman_code(p)
+    _, nbits = coding.encode(signed_idx, norms, method="huffman", codes=codes)
+    d = len(signed_idx)
+    bound = coding.theorem2_expected_bits(p, d, num_buckets=len(norms))
+    assert nbits <= bound * 1.02, (nbits, bound)
+    # entropy coding beats the fixed-width int8 payload for s=7
+    assert nbits < d * 8
+
+
+def test_elias_beats_fp32_massively():
+    signed_idx, norms, _, _ = _quantized_sample(s=3, n=1 << 14, seed=9)
+    _, nbits = coding.encode(signed_idx, norms, method="elias")
+    assert nbits < len(signed_idx) * 32 / 4  # >4x vs fp32

@@ -1,0 +1,48 @@
+"""WGAN-GP reproduction protocol tests (paper Section 5, container-scale)."""
+
+import math
+
+import jax
+import pytest
+
+from repro.core.quantization import QuantConfig
+from repro.gan.wgan import (
+    GANConfig,
+    eight_gaussians,
+    energy_distance,
+    init_gan,
+    train,
+)
+
+
+def test_real_data_sanity():
+    pts = eight_gaussians(jax.random.PRNGKey(0), 512)
+    assert pts.shape == (512, 2)
+    import numpy as np
+
+    r = np.linalg.norm(np.asarray(pts), axis=-1)
+    assert 1.5 < r.mean() < 2.5  # ring of radius 2
+
+
+def test_training_improves_quality():
+    """WGAN-GP needs a few hundred steps before the critic is useful —
+    measure at 600 (ED goes ~1.1 -> ~0.3 on this seed)."""
+    cfg = GANConfig(num_workers=2, batch_per_worker=128)
+    key = jax.random.PRNGKey(0)
+    ed0 = energy_distance(key, {"gen": init_gan(key, cfg)["gen"]}, cfg)
+    out = train(cfg, steps=600, seed=0)
+    assert out["energy_distance"] < ed0 * 0.6, (ed0, out["energy_distance"])
+
+
+def test_compression_cuts_bytes_not_quality():
+    fp = train(GANConfig(num_workers=2, batch_per_worker=128), steps=100, seed=1)
+    uq8 = train(
+        GANConfig(
+            num_workers=2, batch_per_worker=128,
+            quant=QuantConfig(num_levels=15, bits=8, bucket_size=512, q_norm=math.inf),
+        ),
+        steps=100, seed=1,
+    )
+    assert uq8["bytes_per_step_per_worker"] < fp["bytes_per_step_per_worker"] / 3
+    # quality within a generous factor at this tiny scale
+    assert uq8["energy_distance"] < fp["energy_distance"] * 2.0 + 0.5

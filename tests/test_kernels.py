@@ -1,0 +1,102 @@
+"""Pallas kernel tests: shape/dtype sweeps, bit-exact vs the jnp oracle."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QuantConfig,
+    dequantize,
+    quantize,
+    uniform_levels,
+    exponential_levels,
+)
+from repro.kernels.dequantize import dequantize_blocks
+from repro.kernels.ops import dequantize_pallas, quantize_pallas
+from repro.kernels.quantize import quantize_blocks
+from repro.kernels.ref import dequantize_blocks_ref, quantize_blocks_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("nb,bucket", [(1, 128), (8, 256), (16, 1024), (3, 512)])
+@pytest.mark.parametrize("q_is_inf", [True, False])
+@pytest.mark.parametrize("s", [3, 7, 15])
+def test_quantize_kernel_matches_ref(nb, bucket, q_is_inf, s):
+    x = jax.random.normal(KEY, (nb, bucket), jnp.float32) * 3.0
+    noise = jax.random.uniform(jax.random.PRNGKey(1), (nb, bucket), jnp.float32)
+    levels = exponential_levels(s)
+    idx_k, norms_k = quantize_blocks(
+        x, noise, levels, num_symbols=s + 2, q_is_inf=q_is_inf
+    )
+    idx_r, norms_r = quantize_blocks_ref(x, noise, levels, q_is_inf=q_is_inf)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    np.testing.assert_allclose(np.asarray(norms_k), np.asarray(norms_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nb,bucket", [(4, 128), (8, 1024)])
+@pytest.mark.parametrize("s", [3, 15])
+def test_dequantize_kernel_matches_ref(nb, bucket, s):
+    rng = np.random.RandomState(0)
+    idx = jnp.asarray(rng.randint(-(s + 1), s + 2, size=(nb, bucket)), jnp.int8)
+    norms = jnp.asarray(np.abs(rng.randn(nb)) + 0.1, jnp.float32)
+    levels = uniform_levels(s)
+    out_k = dequantize_blocks(idx, norms, levels, num_symbols=s + 2)
+    out_r = dequantize_blocks_ref(idx, norms, levels)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_kernel_dtype_sweep(dtype):
+    """Kernel ingests any float dtype (cast to f32 internally)."""
+    x = (jax.random.normal(KEY, (8, 256), jnp.float32) * 2).astype(dtype)
+    noise = jax.random.uniform(jax.random.PRNGKey(2), (8, 256), jnp.float32)
+    levels = uniform_levels(7)
+    idx_k, norms_k = quantize_blocks(x, noise, levels, num_symbols=9, q_is_inf=True)
+    idx_r, norms_r = quantize_blocks_ref(
+        x.astype(jnp.float32), noise, levels, q_is_inf=True
+    )
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("q", [math.inf, 2.0])
+def test_ops_wrapper_matches_core_quantize_bitexact(bits, q):
+    """quantize_pallas == core.quantize under the same key (same noise)."""
+    s = 5 if bits == 4 else 15
+    cfg = QuantConfig(num_levels=s, q_norm=q, bucket_size=256, bits=bits)
+    levels = uniform_levels(s)
+    v = jax.random.normal(KEY, (1000,), jnp.float32)
+    qt_k = quantize_pallas(v, levels, jax.random.PRNGKey(3), cfg)
+    qt_c = quantize(v, levels, jax.random.PRNGKey(3), cfg)
+    np.testing.assert_array_equal(np.asarray(qt_k.payload), np.asarray(qt_c.payload))
+    np.testing.assert_allclose(np.asarray(qt_k.norms), np.asarray(qt_c.norms), rtol=1e-6)
+    # and the dequant round-trips identically
+    out_k = dequantize_pallas(qt_k, levels, cfg)
+    out_c = dequantize(qt_c, levels, cfg)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_c), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nb=st.integers(min_value=1, max_value=12),
+    log_bucket=st.integers(min_value=7, max_value=11),
+    s=st.sampled_from([1, 7, 15]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_kernel_ref_agreement(nb, log_bucket, s, seed):
+    bucket = 1 << log_bucket
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (nb, bucket), jnp.float32)
+    noise = jax.random.uniform(k2, (nb, bucket), jnp.float32)
+    levels = uniform_levels(s)
+    idx_k, norms_k = quantize_blocks(x, noise, levels, num_symbols=s + 2, q_is_inf=True)
+    idx_r, norms_r = quantize_blocks_ref(x, noise, levels, q_is_inf=True)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    out_k = dequantize_blocks(idx_k, norms_k, levels, num_symbols=s + 2)
+    out_r = dequantize_blocks_ref(idx_r, norms_r, levels)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)

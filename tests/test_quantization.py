@@ -1,0 +1,153 @@
+"""Unit + property tests for the quantization core (Definition 1, Theorem 1)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QuantConfig,
+    bucket_norms,
+    dequantize,
+    empirical_variance_multiplier,
+    exponential_levels,
+    pack_int4,
+    quantize,
+    quantize_dequantize,
+    theorem1_epsilon_q,
+    uniform_levels,
+    unpack_int4,
+    validate_levels,
+)
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_levels_constructors():
+    for s in (1, 3, 7, 15, 31):
+        validate_levels(uniform_levels(s), s)
+        validate_levels(exponential_levels(s), s)
+
+
+def test_int4_pack_roundtrip():
+    vals = jnp.array(np.random.RandomState(0).randint(-7, 8, size=512), jnp.int32)
+    assert jnp.array_equal(unpack_int4(pack_int4(vals)), vals)
+
+
+@pytest.mark.parametrize("q", [2.0, math.inf, 1.0])
+def test_bucket_norms(q):
+    v = jnp.array(np.random.RandomState(1).randn(4, 128), jnp.float32)
+    got = bucket_norms(v, q)
+    if math.isinf(q):
+        want = np.abs(np.asarray(v)).max(-1)
+    else:
+        want = (np.abs(np.asarray(v)) ** q).sum(-1) ** (1 / q)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("q", [2.0, math.inf])
+def test_quantize_dequantize_within_bracket(bits, q):
+    """Dequantized values stay within one level bracket of the original."""
+    cfg = QuantConfig(num_levels=5, q_norm=q, bucket_size=64, bits=bits)
+    levels = uniform_levels(5)
+    v = jnp.array(np.random.RandomState(2).randn(1000), jnp.float32)
+    out = quantize_dequantize(v, levels, KEY, cfg)
+    v2d = np.asarray(v)
+    norms = np.asarray(bucket_norms(jnp.pad(v, (0, 24)).reshape(-1, 64), q))
+    norms_full = np.repeat(norms, 64)[:1000]
+    gap = np.asarray(levels[1]) - 0  # max bracket width for uniform levels
+    max_bracket = np.max(np.diff(np.asarray(levels)))
+    assert np.all(np.abs(np.asarray(out) - v2d) <= max_bracket * norms_full + 1e-5)
+
+
+def test_unbiasedness():
+    """E[Q(v)] = v (Theorem 1 unbiasedness), Monte-Carlo."""
+    cfg = QuantConfig(num_levels=3, q_norm=math.inf, bucket_size=128)
+    levels = uniform_levels(3)
+    v = jnp.array(np.random.RandomState(3).randn(256), jnp.float32)
+    keys = jax.random.split(KEY, 4096)
+    outs = jax.vmap(lambda k: quantize_dequantize(v, levels, k, cfg))(keys)
+    mean = jnp.mean(outs, axis=0)
+    scale = float(jnp.max(jnp.abs(v)))
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(v), atol=0.05 * scale)
+
+
+@pytest.mark.parametrize("s,q", [(3, 2.0), (7, 2.0), (15, 2.0), (7, math.inf)])
+def test_theorem1_variance_bound(s, q):
+    """Empirical E||Q(v)-v||^2/||v||^2 <= eps_Q of Theorem 1.
+
+    Theorem 1 is stated for a single bucket (d = bucket dimension), so use
+    bucket_size = d.
+    """
+    d = 512
+    cfg = QuantConfig(num_levels=s, q_norm=q, bucket_size=d)
+    levels = exponential_levels(s)
+    v = jnp.array(np.random.RandomState(4).randn(d), jnp.float32)
+    emp = empirical_variance_multiplier(v, levels, cfg, KEY, trials=32)
+    bound = theorem1_epsilon_q(np.asarray(levels), d, q)
+    assert emp <= bound * 1.05 + 1e-6, (emp, bound)
+
+
+def test_zero_vector_and_padding():
+    cfg = QuantConfig(num_levels=3, bucket_size=64)
+    levels = uniform_levels(3)
+    v = jnp.zeros((100,), jnp.float32)  # padding path: 100 -> 128
+    out = quantize_dequantize(v, levels, KEY, cfg)
+    assert out.shape == (100,)
+    assert not np.any(np.isnan(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_wire_bytes_savings():
+    cfg8 = QuantConfig(num_levels=15, bits=8, bucket_size=1024)
+    cfg4 = QuantConfig(num_levels=5, bits=4, bucket_size=1024)
+    n = 1 << 16
+    v = jnp.array(np.random.RandomState(5).randn(n), jnp.float32)
+    q8 = quantize(v, uniform_levels(15), KEY, cfg8)
+    q4 = quantize(v, uniform_levels(5), KEY, cfg4)
+    fp32 = n * 4
+    assert q8.wire_bytes() < fp32 / 3.8  # ~4x
+    assert q4.wire_bytes() < fp32 / 7.5  # ~8x
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4096),
+    s=st.sampled_from([1, 3, 7, 15]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    qinf=st.booleans(),
+)
+def test_property_roundtrip_shapes_and_finiteness(n, s, seed, qinf):
+    """Property: any length, any seed — output shape preserved, finite,
+    and |out_i| <= norm of its bucket (levels in [0,1])."""
+    cfg = QuantConfig(num_levels=s, q_norm=math.inf if qinf else 2.0, bucket_size=256)
+    levels = uniform_levels(s)
+    v = jnp.array(np.random.RandomState(seed).randn(n), jnp.float32)
+    out = quantize_dequantize(v, levels, jax.random.PRNGKey(seed), cfg)
+    assert out.shape == v.shape
+    out_np = np.asarray(out)
+    assert np.all(np.isfinite(out_np))
+    padded = np.zeros(((n + 255) // 256) * 256, np.float32)
+    padded[:n] = np.asarray(v)
+    norms = np.asarray(
+        bucket_norms(jnp.asarray(padded).reshape(-1, 256), cfg.q_norm)
+    )
+    per_coord = np.repeat(norms, 256)[:n]
+    assert np.all(np.abs(out_np) <= per_coord + 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_sign_preservation(seed):
+    """Nonzero outputs carry the sign of the input coordinate."""
+    cfg = QuantConfig(num_levels=7, bucket_size=128)
+    v = jnp.array(np.random.RandomState(seed).randn(128), jnp.float32)
+    out = np.asarray(quantize_dequantize(v, uniform_levels(7), jax.random.PRNGKey(seed), cfg))
+    vnp = np.asarray(v)
+    nz = out != 0
+    assert np.all(np.sign(out[nz]) == np.sign(vnp[nz]))
