@@ -1,10 +1,25 @@
 """Kernel micro-benchmarks: Pallas (interpret mode) vs jnp reference for
-quantize/dequantize, plus derived wire-bytes per compression setting.
+the fused exchange pipeline, plus derived wire/HBM-traffic models.
 
 NOTE: on this CPU container the Pallas numbers measure the *interpret mode*
 (Python-level) path and are NOT representative of TPU throughput — the jnp
-reference timing is the CPU-meaningful number; the Pallas column proves the
-kernel contract at the same shapes.
+reference timing is the CPU-meaningful number; the Pallas rows prove the
+kernel contract at the same shapes.  The ``hbm_model`` columns are the
+analytic HBM-traffic ratios (bytes moved fused / bytes moved unfused) that
+the fusion buys on real hardware — the quantity the paper's exchange-cost
+argument depends on.
+
+HBM traffic model per n coordinates (per = 1 byte int8, 0.5 packed int4;
+norms are n/bucket f32 and negligible):
+
+* unfused exchange consumer (dequantize + mean):
+  read K.n.per + write 4Kn + read 4Kn + write 4n  = n(K.per + 8K + 4)
+* fused dequant_reduce: read K.n.per + write 4n
+* unfused two-phase middle (dequantize + mean + quantize), host noise:
+  n(K.per + 8K + 12 + per)
+* fused dequant_reduce_requantize, host noise: n(K.per + 4 + per)
+* fused + on-device PRNG: n(K.per + per)   — the paper-grade K.n/2 + n/2
+  wire-and-HBM figure in 4-bit mode.
 """
 
 import math
@@ -20,6 +35,22 @@ from repro.kernels.quantize import quantize_blocks
 from repro.kernels.ref import dequantize_blocks_ref, quantize_blocks_ref
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _hbm_unfused_consumer(K, per):
+    return K * per + 8 * K + 4
+
+
+def _hbm_fused_consumer(K, per):
+    return K * per + 4
+
+
+def _hbm_unfused_two_phase_mid(K, per):
+    return K * per + 8 * K + 12 + per
+
+
+def _hbm_fused_two_phase_mid(K, per, device_prng=False):
+    return K * per + per + (0 if device_prng else 4)
 
 
 def run():
@@ -49,23 +80,68 @@ def run():
         us = time_fn(pl_d, idx, norms, iters=3)
         emit(f"dequantize_pallas_interp_{n}", us, "interpret-mode;contract-only")
 
+    # in-kernel int4 packing: payload leaving the kernel IS the wire buffer
+    lv4 = uniform_levels(5)
+    nb, bucket = 16, 1024
+    n = nb * bucket
+    x = jax.random.normal(KEY, (nb, bucket), jnp.float32)
+    noise = jax.random.uniform(jax.random.PRNGKey(1), (nb, bucket))
+    pl_q4 = lambda a, r: quantize_blocks(a, r, lv4, num_symbols=7, q_is_inf=True, bits=4)
+    us = time_fn(pl_q4, x, noise, iters=3)
+    emit(f"quantize_pallas_int4_packed_{n}", us,
+         f"payload_bytes={n // 2};wire_halved")
+
     # fused dequant+mean (exchange consumer) vs unfused pipeline
-    import numpy as _np
-    from repro.kernels.dequant_reduce import dequant_reduce_blocks, dequant_reduce_ref
+    from repro.kernels.dequant_reduce import (
+        dequant_reduce_blocks,
+        dequant_reduce_ref,
+        dequant_reduce_requantize_blocks,
+    )
 
     K, nb, bucket = 8, 16, 1024
-    rng = _np.random.RandomState(0)
-    idxs = jnp.asarray(rng.randint(-16, 17, size=(K, nb, bucket)), jnp.int8)
-    nrm = jnp.asarray(_np.abs(rng.randn(K, nb)) + 0.1, jnp.float32)
-    fused = lambda a, b: dequant_reduce_blocks(a, b, levels, num_symbols=17, num_workers=K)
-    us = time_fn(fused, idxs, nrm, iters=3)
     n = nb * bucket
-    emit(f"dequant_reduce_pallas_interp_K{K}_{n}",
-         us, f"hbm_model={(K*n+4*n)/((2*K+1)*4*n):.2f}x_of_unfused")
+    rng = np.random.RandomState(0)
+    idxs = jnp.asarray(rng.randint(-16, 17, size=(K, nb, bucket)), jnp.int8)
+    nrm = jnp.asarray(np.abs(rng.randn(K, nb)) + 0.1, jnp.float32)
+    from repro.kernels.common import pack4_rows
+
+    for bits, per in ((8, 1.0), (4, 0.5)):
+        if bits == 8:
+            payload = idxs
+        else:
+            # legal 4-bit payload: |idx| <= 6 for the 7-entry level table
+            raw = rng.randint(-6, 7, size=(K * nb, bucket))
+            payload = jnp.stack([
+                pack4_rows(jnp.asarray(raw[r * nb:(r + 1) * nb], jnp.int32))
+                for r in range(K)
+            ])
+        lv = levels if bits == 8 else lv4
+        ns = s + 2 if bits == 8 else 7
+        fused = lambda a, b: dequant_reduce_blocks(
+            a, b, lv, num_symbols=ns, num_workers=K, bits=bits
+        )
+        us = time_fn(fused, payload, nrm, iters=3)
+        ratio = _hbm_fused_consumer(K, per) / _hbm_unfused_consumer(K, per)
+        emit(f"dequant_reduce_pallas_interp_b{bits}_K{K}_{n}",
+             us, f"hbm_model={ratio:.3f}x_of_unfused")
+
+        # fused two-phase middle step (deq+mean+requantize, one kernel)
+        noise2 = jax.random.uniform(jax.random.PRNGKey(2), (nb, bucket))
+        fused_rq = lambda a, b, r: dequant_reduce_requantize_blocks(
+            a, b, lv, r, num_symbols=ns, num_workers=K, q_is_inf=True, bits=bits
+        )
+        us = time_fn(fused_rq, payload, nrm, noise2, iters=3)
+        ratio = _hbm_fused_two_phase_mid(K, per) / _hbm_unfused_two_phase_mid(K, per)
+        ratio_prng = _hbm_fused_two_phase_mid(K, per, device_prng=True) / \
+            _hbm_unfused_two_phase_mid(K, per)
+        emit(f"dequant_reduce_requant_pallas_interp_b{bits}_K{K}_{n}", us,
+             f"hbm_model={ratio:.3f}x_of_unfused;device_prng={ratio_prng:.3f}x")
+
     us = time_fn(jax.jit(lambda a, b: dequant_reduce_ref(a, b, levels)), idxs, nrm, iters=5)
     emit(f"dequant_reduce_ref_jnp_K{K}_{n}", us, "")
 
-    # derived wire bytes per setting (App. I trade-off inputs)
+    # derived wire bytes per setting (App. I trade-off inputs) — from the
+    # exact collective-buffer accounting (exchange_buffer_bytes)
     from repro.core.compressed_collectives import wire_bytes_per_device
 
     n = 1 << 20
@@ -74,9 +150,10 @@ def run():
         ("uq8", QuantConfig(num_levels=15, bits=8, bucket_size=1024)),
         ("uq4", QuantConfig(num_levels=5, bits=4, bucket_size=1024)),
     ):
-        for K in (3, 16, 512):
-            b = wire_bytes_per_device(n, K, cfg, mode="two_phase")
-            emit(f"wire_bytes_{tag}_K{K}", 0.0, f"bytes={b:.3e}")
+        for mode in ("gather", "two_phase"):
+            for K in (3, 16, 512):
+                b = wire_bytes_per_device(n, K, cfg, mode=mode)
+                emit(f"wire_bytes_{tag}_{mode}_K{K}", 0.0, f"bytes={b:.3e}")
 
 
 if __name__ == "__main__":

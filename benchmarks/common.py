@@ -22,5 +22,17 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     return times[len(times) // 2] * 1e6
 
 
+# rows emitted by the current section (run.py snapshots these into the
+# committed BENCH_*.json perf baselines).  Only the deterministic fields
+# (name + derived model strings) are recorded — wall-clock timings vary
+# run-to-run and would make the committed baseline perpetually dirty.
+RECORDS: list[dict] = []
+
+
+def reset_records() -> None:
+    RECORDS.clear()
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    RECORDS.append({"name": name, "derived": derived})

@@ -14,14 +14,26 @@ Sections:
 """
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# sections whose rows are snapshotted to a committed BENCH_<name>.json perf
+# baseline after a successful run (the fused-exchange trajectory anchor)
+JSON_BASELINE_SECTIONS = ("kernels",)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated section names")
     ap.add_argument("--gan-steps", type=int, default=150)
+    ap.add_argument(
+        "--json-dir", default=REPO_ROOT,
+        help="where BENCH_<section>.json baselines are written",
+    )
     args = ap.parse_args()
 
     from benchmarks import (
@@ -30,6 +42,7 @@ def main() -> None:
         bench_gan,
         bench_kernels,
         bench_variance,
+        common,
         roofline,
     )
 
@@ -45,12 +58,20 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for name in selected:
+        common.reset_records()
         try:
             sections[name]()
         except Exception:
             failures += 1
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+            continue
+        if name in JSON_BASELINE_SECTIONS:
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"section": name, "rows": list(common.RECORDS)}, f, indent=2)
+                f.write("\n")
+            print(f"# wrote {path}", file=sys.stderr, flush=True)
     if failures:
         raise SystemExit(1)
 

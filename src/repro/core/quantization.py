@@ -74,10 +74,17 @@ class QuantConfig:
         return self.num_levels + 2
 
     def payload_bytes(self, n: int) -> int:
-        """Fixed-width wire bytes for an n-coordinate vector (excl. norms)."""
+        """Fixed-width wire bytes for an n-coordinate vector (incl. norms).
+
+        Accounts the *actual* buffers the collectives move: the vector is
+        padded to whole buckets, so the index payload is
+        ``nb * bucket_size`` coordinates (one byte each, or half a byte
+        packed) plus one f32 norm per bucket.  Equals
+        :meth:`Quantized.wire_bytes` of the quantized vector exactly.
+        """
         nb = -(-n // self.bucket_size)  # ceil
         per_coord = 1 if self.bits == 8 else 0.5
-        return int(math.ceil(n * per_coord)) + 4 * nb
+        return int(nb * self.bucket_size * per_coord) + 4 * nb
 
 
 # ---------------------------------------------------------------------------

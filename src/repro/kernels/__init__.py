@@ -1,10 +1,16 @@
-"""Pallas TPU kernels for the quantize/dequantize hot spots of Q-GenX.
+"""Pallas TPU kernels for the fused exchange pipeline of Q-GenX.
 
-quantize.py / dequantize.py — pl.pallas_call kernels (BlockSpec VMEM tiling)
-dequant_reduce.py — fused dequantize+mean over K workers (exchange consumer)
+common.py — shared row primitives (pack/unpack, quant/dequant, tiling)
+quantize.py / dequantize.py — pl.pallas_call kernels with in-kernel int4
+  packing (the buffer a kernel emits is the wire payload)
+dequant_reduce.py — fused dequantize+mean (exchange consumer) and fused
+  dequantize+mean+requantize (two-phase middle step)
 ops.py — jitted wrappers matching repro.core.quantization's contract
 ref.py — pure-jnp oracle used by the allclose/bit-exact tests
 """
 
-from repro.kernels.dequant_reduce import dequant_reduce_blocks  # noqa: F401
+from repro.kernels.dequant_reduce import (  # noqa: F401
+    dequant_reduce_blocks,
+    dequant_reduce_requantize_blocks,
+)
 from repro.kernels.ops import dequantize_pallas, quantize_pallas  # noqa: F401

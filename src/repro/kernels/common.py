@@ -1,0 +1,134 @@
+"""Shared row-level primitives for the fused exchange kernels.
+
+Every exchange kernel (quantize, dequantize, dequant+reduce,
+dequant+reduce+requantize) operates on [rows, bucket] tiles where a row is
+one norm bucket.  This module holds the pieces they compose:
+
+* ``quant_rows`` / ``dequant_rows`` — the Definition-1 value maps.  The
+  level-bracket selection is a single vectorized compare-accumulate pass
+  followed by SMEM-table *gathers* (``jnp.take`` on the level table) for the
+  lo/hi bracket endpoints and the dequant value lookup — replacing the
+  seed's two O(s) unrolled compare-select loops (2s selects per element)
+  with one gather each.
+* ``pack4_rows`` / ``unpack4_rows`` — in-kernel int4 two-per-byte packing,
+  so the payload a kernel emits is the payload that goes on the wire
+  (DESIGN.md §Wire format).
+* ``pad_rows`` — pads the bucket-row axis to a multiple of
+  ``ROWS_PER_BLOCK`` so grid tiles are always full (8, bucket) blocks.
+  The seed's ``bb = gcd(ROWS_PER_BLOCK, nb)`` tiling degenerated to 1-row
+  blocks for odd ``nb``; callers now pad and slice instead.
+
+All helpers are pure jnp on values, so they are usable both inside Pallas
+kernel bodies and in the jnp reference oracles (bit-exact by construction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROWS_PER_BLOCK = 8  # bucket rows per grid step; bucket=1024 -> 32 KiB f32
+
+
+def padded_rows(nb: int) -> int:
+    """Smallest multiple of ROWS_PER_BLOCK >= nb."""
+    return -(-nb // ROWS_PER_BLOCK) * ROWS_PER_BLOCK
+
+
+def pad_rows(arr, axis: int = 0):
+    """Zero-pad ``axis`` up to a multiple of ROWS_PER_BLOCK."""
+    nb = arr.shape[axis]
+    pad = padded_rows(nb) - nb
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths)
+
+
+def derive_prng_seed(key):
+    """Traced int32[1] seed for the in-kernel PRNG, derived from a jax key.
+
+    The single place the key -> on-core-PRNG-seed contract lives; the
+    kernel adds ``pl.program_id`` per grid step on top.
+    """
+    return jax.random.randint(key, (1,), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+
+
+def prng_uniform(seed_ref, shape):
+    """In-kernel uniform [0, 1) draw from the on-core PRNG (TPU only).
+
+    Seeds per grid step from the traced ``seed_ref`` scalar.  The bits come
+    back int32, so the sign extension of the arithmetic shift is masked off
+    AFTER shifting to keep the 24-bit mantissa draw uniform.
+    """
+    pltpu.prng_seed(seed_ref[0] + pl.program_id(0))
+    bits32 = pltpu.prng_random_bits(shape)
+    return ((bits32 >> 8) & 0xFFFFFF).astype(jnp.float32) * (2.0**-24)
+
+
+def norm_rows(x, q_is_inf: bool):
+    """Per-row L^inf or L^2 norm of a [rows, bucket] f32 tile."""
+    if q_is_inf:
+        return jnp.max(jnp.abs(x), axis=1)
+    return jnp.sqrt(jnp.sum(x * x, axis=1))
+
+
+def pack4_rows(signed_idx):
+    """Pack signed 4-bit indices two-per-byte along the bucket axis.
+
+    [rows, bucket] int32 in [-7, 7] -> [rows, bucket // 2] int8 with
+    byte = (a & 0xF) | ((b & 0xF) << 4) for column pairs (2j, 2j + 1) —
+    the same flat order as :func:`repro.core.quantization.pack_int4`.
+    """
+    a = signed_idx[:, 0::2] & 0xF
+    b = signed_idx[:, 1::2] & 0xF
+    return (a | (b << 4)).astype(jnp.int8)
+
+
+def unpack4_rows(packed):
+    """Inverse of :func:`pack4_rows`: [rows, P] int8 -> [rows, 2P] int32."""
+    u = packed.astype(jnp.int32) & 0xFF
+    a = u & 0xF
+    b = (u >> 4) & 0xF
+    a = jnp.where(a >= 8, a - 16, a)
+    b = jnp.where(b >= 8, b - 16, b)
+    rows, half = packed.shape
+    return jnp.stack([a, b], axis=-1).reshape(rows, 2 * half)
+
+
+def dequant_rows(signed_idx, lv, norms):
+    """DEQ: signed int32 indices [rows, bucket] -> f32 values.
+
+    ``lv`` is the full level table (read once from SMEM); the value lookup
+    is one table gather instead of a per-symbol select chain.
+    """
+    vals = jnp.take(lv, jnp.abs(signed_idx))
+    sign = jnp.where(signed_idx < 0, -1.0, 1.0)
+    return vals * sign * norms[:, None]
+
+
+def quant_rows(x, lv, r, num_symbols: int, q_is_inf: bool):
+    """Q: f32 [rows, bucket] -> (signed int32 indices, f32 row norms).
+
+    One pass: row norms, normalization, level search (single vectorized
+    compare-accumulate over the s interior levels), bracket endpoints via
+    SMEM-table gathers, stochastic rounding against uniform noise ``r``.
+    Bit-compatible with the ``searchsorted``-based jnp oracle.
+    """
+    norms = norm_rows(x, q_is_inf)
+    safe = jnp.where(norms > 0, norms, 1.0)
+    u = jnp.clip(jnp.abs(x) / safe[:, None], 0.0, 1.0)
+    # tau = #{j >= 1 : levels[j] <= u}, in [0, s]; u = 1.0 deterministically
+    # reaches the top bracket (levels[s+1] = 1 is excluded from the count).
+    tau = jnp.zeros(u.shape, jnp.int32)
+    for j in range(1, num_symbols - 1):
+        tau += (u >= lv[j]).astype(jnp.int32)
+    lo = jnp.take(lv, tau)
+    hi = jnp.take(lv, tau + 1)
+    xi = (u - lo) / (hi - lo)
+    up = (r < xi).astype(jnp.int32)
+    idx = tau + up
+    return jnp.where(x < 0, -idx, idx), norms

@@ -1,66 +1,80 @@
 """Pallas TPU kernel for dequantization (DEQ of Algorithm 1).
 
-Reads the int8 signed-index payload and per-bucket norms, reconstructs
-f32 values: v = sign(idx) * levels[|idx|] * norm_bucket.  Like the
-quantizer this is a pure bandwidth kernel; the payload is 4x smaller than
-the output, so the kernel is output-bandwidth-bound — tiles are chosen so
-each (8,128) f32 output tile is produced from a single contiguous int8
-input tile.  The level table lookup is an unrolled compare-select over the
-(static, small) symbol count, which the VPU executes as vectorized selects.
+Reads the wire payload (int8 signed indices, or the packed two-per-byte
+int4 buffer) and per-bucket norms, reconstructs f32 values:
+v = sign(idx) * levels[|idx|] * norm_bucket.  Like the quantizer this is a
+pure bandwidth kernel; the payload is 4x (8x packed) smaller than the
+output, so the kernel is output-bandwidth-bound — tiles are chosen so each
+(8, bucket) f32 output tile is produced from a single contiguous int8
+input tile.  The level lookup is one SMEM-table gather (kernels/common.py)
+instead of the seed's unrolled per-symbol select chain; int4 unpacking
+happens in-kernel so the packed buffer is read directly off the wire.
 """
 
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-ROWS_PER_BLOCK = 8
+from repro.kernels.common import (
+    ROWS_PER_BLOCK,
+    dequant_rows,
+    pad_rows,
+    padded_rows,
+    unpack4_rows,
+)
 
 
 def _dequantize_kernel(
-    idx_ref,     # [BB, bucket] int8 VMEM
+    idx_ref,     # [BB, P] int8 VMEM (P = bucket, or bucket/2 packed)
     norms_ref,   # [BB] f32 VMEM
     levels_ref,  # [s+2] f32 SMEM
     out_ref,     # [BB, bucket] f32 VMEM
     *,
-    num_symbols: int,
+    pack4: bool,
 ):
-    signed = idx_ref[...].astype(jnp.int32)
-    mag = jnp.abs(signed)
-    sign = jnp.where(signed < 0, -1.0, 1.0)
-    vals = jnp.zeros(mag.shape, jnp.float32)
-    for j in range(num_symbols):
-        vals = jnp.where(mag == j, levels_ref[j], vals)
-    out_ref[...] = vals * sign * norms_ref[...][:, None]
+    signed = idx_ref[...]
+    signed = unpack4_rows(signed) if pack4 else signed.astype(jnp.int32)
+    out_ref[...] = dequant_rows(signed, levels_ref[...], norms_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("num_symbols", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("num_symbols", "bits", "interpret")
+)
 def dequantize_blocks(
     idx2d: jax.Array,
     norms: jax.Array,
     levels: jax.Array,
     *,
     num_symbols: int,
+    bits: int = 8,
     interpret: bool = True,
 ):
-    nb, bucket = idx2d.shape
-    bb = math.gcd(ROWS_PER_BLOCK, nb)
-    grid = (nb // bb,)
-    kernel = functools.partial(_dequantize_kernel, num_symbols=num_symbols)
-    return pl.pallas_call(
+    """DEQ [nb, P] payload -> [nb, bucket] f32 (P = bucket or bucket/2).
+
+    ``num_symbols`` is kept for API symmetry with the quantizer (the gather
+    needs only the level table itself).
+    """
+    del num_symbols
+    nb, payload_cols = idx2d.shape
+    bucket = payload_cols if bits == 8 else payload_cols * 2
+    nbp = padded_rows(nb)
+    grid = (nbp // ROWS_PER_BLOCK,)
+    kernel = functools.partial(_dequantize_kernel, pack4=bits == 4)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
-            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((ROWS_PER_BLOCK, payload_cols), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_BLOCK,), lambda i: (i,)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, bucket), jnp.float32),
-        interpret=pltpu.InterpretParams() if interpret else False,
-    )(idx2d, norms.astype(jnp.float32), levels.astype(jnp.float32))
+        out_specs=pl.BlockSpec((ROWS_PER_BLOCK, bucket), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, bucket), jnp.float32),
+        interpret=interpret,
+    )(pad_rows(idx2d), pad_rows(norms.astype(jnp.float32)), levels.astype(jnp.float32))
+    return out[:nb]

@@ -2,14 +2,19 @@
 
 Drop-in replacements for :func:`repro.core.quantization.quantize` /
 ``dequantize`` that route the hot inner loop through the Pallas kernels.
+In 4-bit mode the pack/unpack happens *inside* the kernels, so the
+``Quantized.payload`` these wrappers produce/consume is the in-kernel
+packed buffer — byte-identical to the host-side
+:func:`repro.core.quantization.pack_int4` layout.
+
 On this CPU container the kernels run in TPU interpret mode; on real TPUs
-set ``interpret=False`` (and optionally ``use_device_prng=True``).
+set ``interpret=False`` (and optionally ``use_device_prng=True`` with a
+seed array, which skips the host noise buffer entirely).
 """
 
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -17,10 +22,9 @@ import jax.numpy as jnp
 from repro.core.quantization import (
     QuantConfig,
     Quantized,
-    pack_int4,
-    unpack_int4,
     _pad_to_buckets,
 )
+from repro.kernels.common import derive_prng_seed
 from repro.kernels.dequantize import dequantize_blocks
 from repro.kernels.quantize import quantize_blocks
 
@@ -36,20 +40,24 @@ def quantize_pallas(
 ) -> Quantized:
     flat = v.reshape(-1)
     x2d, n = _pad_to_buckets(flat, cfg.bucket_size)
-    noise = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    if use_device_prng:
+        noise = None
+        seed = derive_prng_seed(key)
+    else:
+        noise = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+        seed = None
     idx, norms = quantize_blocks(
         x2d,
         noise,
         levels,
         num_symbols=cfg.num_symbols,
         q_is_inf=math.isinf(cfg.q_norm),
+        bits=cfg.bits,
         use_device_prng=use_device_prng,
+        seed=seed,
         interpret=interpret,
     )
-    payload = idx.reshape(-1)
-    if cfg.bits == 4:
-        payload = pack_int4(payload.astype(jnp.int32))
-    return Quantized(payload=payload, norms=norms, n=n)
+    return Quantized(payload=idx.reshape(-1), norms=norms, n=n)
 
 
 def dequantize_pallas(
@@ -59,12 +67,14 @@ def dequantize_pallas(
     *,
     interpret: bool = True,
 ) -> jax.Array:
-    if cfg.bits == 4:
-        idx = unpack_int4(qt.payload).astype(jnp.int8)
-    else:
-        idx = qt.payload
-    idx2d = idx.reshape(-1, cfg.bucket_size)
+    payload_cols = cfg.bucket_size if cfg.bits == 8 else cfg.bucket_size // 2
+    idx2d = qt.payload.reshape(-1, payload_cols)
     out = dequantize_blocks(
-        idx2d, qt.norms, levels, num_symbols=cfg.num_symbols, interpret=interpret
+        idx2d,
+        qt.norms,
+        levels,
+        num_symbols=cfg.num_symbols,
+        bits=cfg.bits,
+        interpret=interpret,
     )
     return out.reshape(-1)[: qt.n]

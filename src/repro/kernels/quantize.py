@@ -5,17 +5,24 @@ worker compresses its full dual vector (the gradient pytree) before the
 collective exchange.  The kernel is a pure VPU/bandwidth kernel — no MXU —
 so the design goals are (a) stream HBM->VMEM in (8,128)-aligned tiles,
 (b) one pass: norm reduction, normalization, level search, stochastic
-rounding and int8 emission fused, (c) per-bucket norms computed on-chip so
-the f32 input is read exactly once.
+rounding, int8 emission AND int4 packing fused, (c) per-bucket norms
+computed on-chip so the f32 input is read exactly once.
 
-Layout: the wrapper reshapes the flat vector to [nb, bucket]; the grid
-tiles rows of buckets (ROWS_PER_BLOCK buckets per grid step).  The level
-table (s+2 <= 128 scalars) sits in SMEM; the level search is an unrolled
-compare-accumulate (s is small and static), which vectorizes on the VPU.
+Layout: the wrapper reshapes the flat vector to [nb, bucket] and pads the
+row axis to a multiple of ROWS_PER_BLOCK, so every grid step works on a
+full (8, bucket) tile (the seed's gcd tiling degenerated to 1-row blocks
+for odd nb).  The level table (s+2 <= 128 scalars) sits in SMEM; bracket
+endpoints come from SMEM-table gathers (see kernels/common.py).
 
-Randomness: production TPUs use the on-core PRNG
-(``pltpu.prng_seed`` / ``prng_random_bits``); interpret mode on CPU stubs
-those out, so the *validated* path streams uniform noise generated with
+In 4-bit mode the payload is packed two-per-byte *inside* the kernel —
+the [nb, bucket/2] int8 buffer this kernel writes is exactly what the
+collective moves, halving wire bytes versus shipping unpacked indices.
+
+Randomness: production TPUs use the on-core PRNG (``use_device_prng=True``
+— ``pltpu.prng_seed`` / ``prng_random_bits`` seeded from a traced int32
+scalar), which skips generating and re-reading a full-size f32 noise
+buffer every exchange.  Interpret mode on CPU cannot lower those
+primitives, so the *validated* path streams uniform noise generated with
 ``jax.random`` (bit-compatible with the jnp reference oracle) — selected
 by ``use_device_prng=False`` (default).  See DESIGN.md §Hardware adaptation.
 """
@@ -23,105 +30,111 @@ by ``use_device_prng=False`` (default).  See DESIGN.md §Hardware adaptation.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-ROWS_PER_BLOCK = 8  # buckets (rows) per grid step; bucket=1024 -> 32 KiB f32
-
-
-def _norm_rows(x, q_is_inf: bool):
-    if q_is_inf:
-        return jnp.max(jnp.abs(x), axis=1)
-    return jnp.sqrt(jnp.sum(x * x, axis=1))
+from repro.kernels.common import (
+    ROWS_PER_BLOCK,
+    pack4_rows,
+    pad_rows,
+    padded_rows,
+    prng_uniform,
+    quant_rows,
+)
 
 
 def _quantize_kernel(
-    x_ref,        # [BB, bucket] f32 VMEM
-    noise_ref,    # [BB, bucket] f32 VMEM (uniform [0,1))
-    levels_ref,   # [s+2] f32 SMEM
-    idx_ref,      # [BB, bucket] int8 VMEM out
-    norms_ref,    # [BB] f32 VMEM out
-    *,
+    *refs,  # x [BB, bucket] f32; noise [BB, bucket] f32 | seed [1] i32 SMEM;
+            # levels [s+2] f32 SMEM; out: idx [BB, P] int8, norms [BB] f32
     num_symbols: int,
     q_is_inf: bool,
+    pack4: bool,
     use_device_prng: bool,
-    seed: int,
 ):
-    x = x_ref[...]
-    norms = _norm_rows(x, q_is_inf)
-    norms_ref[...] = norms
-    safe = jnp.where(norms > 0, norms, 1.0)
-    u = jnp.clip(jnp.abs(x) / safe[:, None], 0.0, 1.0)
-
-    # Level search: tau = #{j >= 1 : levels[j] <= u}, clipped to s (so that
-    # u = 1.0 rounds deterministically up to the top level).
-    tau = jnp.zeros(u.shape, jnp.int32)
-    for j in range(1, num_symbols - 1):
-        tau += (u >= levels_ref[j]).astype(jnp.int32)
-    lo = jnp.zeros(u.shape, jnp.float32)
-    hi = jnp.zeros(u.shape, jnp.float32)
-    for j in range(num_symbols - 1):
-        sel = tau == j
-        lo = jnp.where(sel, levels_ref[j], lo)
-        hi = jnp.where(sel, levels_ref[j + 1], hi)
-    xi = (u - lo) / (hi - lo)
-
     if use_device_prng:
-        pltpu.prng_seed(seed + pl.program_id(0))
-        bits = pltpu.prng_random_bits(u.shape)
-        r = (bits >> 8).astype(jnp.float32) * (2.0**-24)
+        x_ref, levels_ref, seed_ref, idx_ref, norms_ref = refs
     else:
-        r = noise_ref[...]
-    up = (r < xi).astype(jnp.int32)
-    idx = tau + up
-    signed = jnp.where(x < 0, -idx, idx)
-    idx_ref[...] = signed.astype(jnp.int8)
+        x_ref, noise_ref, levels_ref, idx_ref, norms_ref = refs
+    x = x_ref[...]
+    lv = levels_ref[...]
+    r = prng_uniform(seed_ref, x.shape) if use_device_prng else noise_ref[...]
+    signed, norms = quant_rows(x, lv, r, num_symbols, q_is_inf)
+    norms_ref[...] = norms
+    idx_ref[...] = pack4_rows(signed) if pack4 else signed.astype(jnp.int8)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_symbols", "q_is_inf", "use_device_prng", "seed", "interpret")
+    jax.jit,
+    static_argnames=("num_symbols", "q_is_inf", "bits", "use_device_prng", "interpret"),
 )
 def quantize_blocks(
     x2d: jax.Array,
-    noise: jax.Array,
+    noise,
     levels: jax.Array,
     *,
     num_symbols: int,
     q_is_inf: bool,
+    bits: int = 8,
     use_device_prng: bool = False,
-    seed: int = 0,
+    seed=None,
     interpret: bool = True,
 ):
-    """Run the quantize kernel over [nb, bucket] f32 -> (int8 idx, f32 norms)."""
+    """Quantize [nb, bucket] f32 -> (payload int8, f32 norms).
+
+    The payload is [nb, bucket] signed indices (``bits=8``) or the packed
+    [nb, bucket // 2] two-per-byte buffer (``bits=4``) — in 4-bit mode the
+    packing happens inside the kernel, so this buffer is the wire payload.
+
+    ``use_device_prng=True`` (TPU only): ``noise`` must be None and
+    ``seed`` a traced int32 array of shape [1]; the kernel draws its own
+    stochastic-rounding bits on-core instead of reading a noise buffer.
+    """
     nb, bucket = x2d.shape
-    bb = math.gcd(ROWS_PER_BLOCK, nb)
-    grid = (nb // bb,)
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if bits == 4 and bucket % 2:
+        raise ValueError("4-bit packing needs an even bucket size")
+    payload_cols = bucket if bits == 8 else bucket // 2
+    nbp = padded_rows(nb)
+    grid = (nbp // ROWS_PER_BLOCK,)
+
+    inputs = [pad_rows(x2d.astype(jnp.float32))]
+    in_specs = [pl.BlockSpec((ROWS_PER_BLOCK, bucket), lambda i: (i, 0))]
+    if not use_device_prng:
+        if noise is None:
+            raise ValueError("host-noise path needs the uniform noise buffer")
+        inputs.append(pad_rows(noise.astype(jnp.float32)))
+        in_specs.append(pl.BlockSpec((ROWS_PER_BLOCK, bucket), lambda i: (i, 0)))
+    inputs.append(levels.astype(jnp.float32))
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    if use_device_prng:
+        if seed is None:
+            raise ValueError("use_device_prng needs a traced int32 seed array [1]")
+        inputs.append(jnp.asarray(seed, jnp.int32).reshape(1))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+
     kernel = functools.partial(
         _quantize_kernel,
         num_symbols=num_symbols,
         q_is_inf=q_is_inf,
+        pack4=bits == 4,
         use_device_prng=use_device_prng,
-        seed=seed,
     )
-    return pl.pallas_call(
+    idx, norms = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
-            pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((bb, bucket), lambda i: (i, 0)),
-            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((ROWS_PER_BLOCK, payload_cols), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_BLOCK,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nb, bucket), jnp.int8),
-            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nbp, payload_cols), jnp.int8),
+            jax.ShapeDtypeStruct((nbp,), jnp.float32),
         ],
-        interpret=pltpu.InterpretParams() if interpret else False,
-    )(x2d.astype(jnp.float32), noise.astype(jnp.float32), levels.astype(jnp.float32))
+        interpret=interpret,
+    )(*inputs)
+    return idx[:nb], norms[:nb]

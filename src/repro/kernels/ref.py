@@ -2,8 +2,9 @@
 
 The canonical implementation lives in :mod:`repro.core.quantization`; this
 module exposes it in kernel-shaped form ([nb, bucket] blocks with explicit
-noise) so tests can assert bit-exact agreement between the Pallas kernels
-and the reference under identical random draws.
+noise, optional packed int4 payloads) so tests can assert bit-exact
+agreement between the Pallas kernels and the reference under identical
+random draws.
 """
 
 from __future__ import annotations
@@ -14,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import bucket_norms
+from repro.kernels.common import pack4_rows, unpack4_rows
 
 
 def quantize_blocks_ref(
@@ -22,8 +24,10 @@ def quantize_blocks_ref(
     levels: jax.Array,
     *,
     q_is_inf: bool,
+    bits: int = 8,
 ):
-    """Reference for kernels.quantize.quantize_blocks (same contract)."""
+    """Reference for kernels.quantize.quantize_blocks (same contract —
+    packed [nb, bucket // 2] payload in 4-bit mode)."""
     x2d = x2d.astype(jnp.float32)
     levels = levels.astype(jnp.float32)
     norms = bucket_norms(x2d, math.inf if q_is_inf else 2.0)
@@ -36,11 +40,16 @@ def quantize_blocks_ref(
     xi = (u - lo) / (hi - lo)
     up = (noise < xi).astype(jnp.int32)
     idx = tau + up
-    signed = jnp.where(x2d < 0, -idx, idx).astype(jnp.int8)
-    return signed, norms
+    signed = jnp.where(x2d < 0, -idx, idx)
+    if bits == 4:
+        return pack4_rows(signed), norms
+    return signed.astype(jnp.int8), norms
 
 
-def dequantize_blocks_ref(idx2d: jax.Array, norms: jax.Array, levels: jax.Array):
-    signed = idx2d.astype(jnp.int32)
+def dequantize_blocks_ref(
+    idx2d: jax.Array, norms: jax.Array, levels: jax.Array, *, bits: int = 8
+):
+    """Reference DEQ; accepts the packed payload in 4-bit mode."""
+    signed = unpack4_rows(idx2d) if bits == 4 else idx2d.astype(jnp.int32)
     vals = levels.astype(jnp.float32)[jnp.abs(signed)]
     return vals * jnp.sign(signed).astype(jnp.float32) * norms[:, None]

@@ -249,11 +249,15 @@ def lower_combo(
             batch_struct["pos"],
         )
 
-    with jax.sharding.set_mesh(mesh):
+    # jax 0.4.x: the Mesh object is the ambient-mesh context manager
+    # (jax.sharding.set_mesh arrived in later releases)
+    with mesh:
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax 0.4.x: list of one dict
+            cost = cost[0] if cost else {}
 
     hlo = compiled.as_text()
     analysis = analyze_hlo(hlo)

@@ -25,6 +25,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -114,18 +115,18 @@ def make_train_step(
     # params/opt_state replicated over the compressed axis (pure DP across
     # it); batch sharded on its leading dim; key replicated (folded inside);
     # all OTHER mesh axes stay under automatic (GSPMD) partitioning —
-    # jax.shard_map's axis_names selects the manual subset.
+    # shard_map's ``auto`` frozenset selects the non-manual subset.
     def sharded_step(params, opt_state, batch, key):
         batch_specs = {
             k: P(compress_axis, *([None] * (v.ndim - 1))) for k, v in batch.items()
         }
-        fn = jax.shard_map(
+        fn = shard_map(
             core_step,
             mesh=mesh,
             in_specs=(P(), P(), batch_specs, P()),
             out_specs=(P(), P(), {"loss": P()}),
-            check_vma=False,
-            axis_names={compress_axis},
+            check_rep=False,
+            auto=frozenset(mesh.axis_names) - {compress_axis},
         )
         return fn(params, opt_state, batch, key)
 

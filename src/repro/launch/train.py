@@ -114,7 +114,9 @@ def main(argv=None):
         pipe.restore({"step": start_step, "seed": args.seed})
         print(f"[train] restored step {start_step}")
 
-    mesh_ctx = jax.sharding.set_mesh(mesh) if n_dev > 1 else None
+    # ambient mesh for sharding propagation (jax 0.4.x: Mesh is the
+    # context manager; jax.sharding.set_mesh arrived in later releases)
+    mesh_ctx = mesh if n_dev > 1 else None
     if mesh_ctx is not None:
         mesh_ctx.__enter__()
     times = []

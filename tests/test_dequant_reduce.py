@@ -4,9 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.kernels.dequant_reduce import dequant_reduce_blocks, dequant_reduce_ref
+from repro.kernels.dequant_reduce import (
+    dequant_reduce_blocks,
+    dequant_reduce_ref,
+    dequant_reduce_requantize_blocks,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -43,6 +47,78 @@ def test_equals_unfused_pipeline():
     np.testing.assert_allclose(
         np.asarray(fused), np.asarray(per_worker.mean(0)), rtol=1e-6, atol=1e-6
     )
+
+
+def test_fixed_seed_numpy_fallback():
+    """Deterministic no-hypothesis case: a hand-checkable 2-worker mean."""
+    levels = jnp.linspace(0.0, 1.0, 4)  # 0, 1/3, 2/3, 1
+    idx = jnp.asarray([[[3, -3, 0, 1]], [[3, 3, 0, -1]]], jnp.int8)  # [2, 1, 4]
+    norms = jnp.asarray([[2.0], [4.0]], jnp.float32)
+    got = np.asarray(
+        dequant_reduce_blocks(idx, norms, levels, num_symbols=4, num_workers=2)
+    )
+    want = np.array([[(2.0 + 4.0) / 2, (-2.0 + 4.0) / 2, 0.0, (2 / 3 - 4 / 3) / 2]])
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("nb", [1, 3, 8])  # odd nb: padded tiling, not gcd
+def test_odd_row_counts(nb):
+    K, s = 3, 7
+    idx, norms, levels = _payload(K, nb, 128, s, seed=nb)
+    got = dequant_reduce_blocks(idx, norms, levels, num_symbols=s + 2, num_workers=K)
+    want = dequant_reduce_ref(idx, norms, levels)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_requantize_fused_equals_unfused(bits):
+    """dequant_reduce_requantize == dequant_reduce + quantize, bit-exact
+    (same noise), incl. the packed 4-bit wire format."""
+    from repro.kernels.quantize import quantize_blocks
+
+    K, nb, bucket, s = 4, 5, 256, 5
+    rng = np.random.RandomState(11)
+    x = jnp.asarray(rng.randn(K * nb, bucket), jnp.float32)
+    noise = jax.random.uniform(jax.random.PRNGKey(0), x.shape, jnp.float32)
+    levels = jnp.linspace(0.0, 1.0, s + 2)
+    idx, norms = quantize_blocks(
+        x, noise, levels, num_symbols=s + 2, q_is_inf=True, bits=bits
+    )
+    idx = idx.reshape(K, nb, -1)
+    norms = norms.reshape(K, nb)
+    noise2 = jax.random.uniform(jax.random.PRNGKey(1), (nb, bucket), jnp.float32)
+    ridx, rnorms = dequant_reduce_requantize_blocks(
+        idx, norms, levels, noise2,
+        num_symbols=s + 2, num_workers=K, q_is_inf=True, bits=bits,
+    )
+    mean2d = dequant_reduce_blocks(
+        idx, norms, levels, num_symbols=s + 2, num_workers=K, bits=bits
+    )
+    uidx, unorms = quantize_blocks(
+        mean2d, noise2, levels, num_symbols=s + 2, q_is_inf=True, bits=bits
+    )
+    np.testing.assert_array_equal(np.asarray(ridx), np.asarray(uidx))
+    np.testing.assert_allclose(np.asarray(rnorms), np.asarray(unorms), rtol=1e-6)
+
+
+def test_packed_payload_matches_unpacked_semantics():
+    """4-bit fused reduce on the packed buffer == 8-bit reduce on the
+    unpacked indices (same indices, same norms)."""
+    from repro.kernels.common import pack4_rows
+
+    K, nb, bucket, s = 3, 4, 128, 5
+    idx, norms, levels = _payload(K, nb, bucket, min(s, 5), seed=2)
+    idx = jnp.clip(idx, -6, 6)  # fit signed 4-bit
+    packed = jnp.stack(
+        [pack4_rows(idx[k].astype(jnp.int32)) for k in range(K)]
+    )
+    got = dequant_reduce_blocks(
+        packed, norms, levels, num_symbols=s + 2, num_workers=K, bits=4
+    )
+    want = dequant_reduce_blocks(
+        idx, norms, levels, num_symbols=s + 2, num_workers=K, bits=8
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
 
 
 @settings(max_examples=8, deadline=None)

@@ -26,12 +26,16 @@ def test_real_data_sanity():
 
 def test_training_improves_quality():
     """WGAN-GP needs a few hundred steps before the critic is useful —
-    measure at 600 (ED goes ~1.1 -> ~0.3 on this seed)."""
+    measure at 600.  The untrained-init ED depends on the default
+    initializer RNG (jax-version sensitive: ~1.1 historically, ~0.46 on
+    jax 0.4.37), so assert both relative improvement and the absolute
+    quality the trained generator reaches on this seed (~0.35)."""
     cfg = GANConfig(num_workers=2, batch_per_worker=128)
     key = jax.random.PRNGKey(0)
     ed0 = energy_distance(key, {"gen": init_gan(key, cfg)["gen"]}, cfg)
     out = train(cfg, steps=600, seed=0)
-    assert out["energy_distance"] < ed0 * 0.6, (ed0, out["energy_distance"])
+    assert out["energy_distance"] < ed0 * 0.85, (ed0, out["energy_distance"])
+    assert out["energy_distance"] < 0.42, (ed0, out["energy_distance"])
 
 
 def test_compression_cuts_bytes_not_quality():

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.quantization import (
     QuantConfig,
@@ -79,6 +79,70 @@ def test_ops_wrapper_matches_core_quantize_bitexact(bits, q):
     out_k = dequantize_pallas(qt_k, levels, cfg)
     out_c = dequantize(qt_c, levels, cfg)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_c), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nb", [1, 3, 5, 7, 13])
+def test_odd_row_counts_padded_tiling(nb):
+    """Odd nb used to degenerate to 1-row blocks (gcd tiling); the padded
+    grid must stay bit-exact vs the reference."""
+    x = jax.random.normal(KEY, (nb, 384), jnp.float32)
+    noise = jax.random.uniform(jax.random.PRNGKey(4), (nb, 384), jnp.float32)
+    levels = uniform_levels(7)
+    idx_k, norms_k = quantize_blocks(x, noise, levels, num_symbols=9, q_is_inf=False)
+    idx_r, norms_r = quantize_blocks_ref(x, noise, levels, q_is_inf=False)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    np.testing.assert_allclose(np.asarray(norms_k), np.asarray(norms_r), rtol=1e-6)
+    out_k = dequantize_blocks(idx_k, norms_k, levels, num_symbols=9)
+    out_r = dequantize_blocks_ref(idx_r, norms_r, levels)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nb,bucket", [(4, 128), (3, 1024)])
+def test_in_kernel_int4_packing(nb, bucket):
+    """4-bit mode emits the packed two-per-byte buffer from inside the
+    kernel — byte-identical to host-side pack_int4 of the 8-bit indices,
+    and half the bytes."""
+    from repro.core.quantization import pack_int4
+
+    s = 5
+    x = jax.random.normal(KEY, (nb, bucket), jnp.float32)
+    noise = jax.random.uniform(jax.random.PRNGKey(5), (nb, bucket), jnp.float32)
+    levels = uniform_levels(s)
+    idx8, norms8 = quantize_blocks(x, noise, levels, num_symbols=s + 2, q_is_inf=True)
+    idx4, norms4 = quantize_blocks(
+        x, noise, levels, num_symbols=s + 2, q_is_inf=True, bits=4
+    )
+    assert idx4.shape == (nb, bucket // 2) and idx4.dtype == jnp.int8
+    want = np.asarray(pack_int4(idx8.astype(jnp.int32).reshape(-1))).reshape(
+        nb, bucket // 2
+    )
+    np.testing.assert_array_equal(np.asarray(idx4), want)
+    np.testing.assert_allclose(np.asarray(norms4), np.asarray(norms8), rtol=1e-6)
+    # and the packed buffer dequantizes identically to the unpacked one
+    out4 = dequantize_blocks(idx4, norms4, levels, num_symbols=s + 2, bits=4)
+    out8 = dequantize_blocks(idx8, norms8, levels, num_symbols=s + 2)
+    np.testing.assert_allclose(np.asarray(out4), np.asarray(out8), rtol=1e-6)
+
+
+def test_device_prng_path_traces_without_noise_buffer():
+    """use_device_prng is TPU-only (no interpret-mode lowering), but the
+    call must trace with NO noise input — only a [1] int32 seed."""
+    x = jax.random.normal(KEY, (8, 256), jnp.float32)
+    levels = uniform_levels(5)
+    seed = jnp.zeros((1,), jnp.int32)
+    idx_s, norms_s = jax.eval_shape(
+        lambda a, sd: quantize_blocks(
+            a, None, levels, num_symbols=7, q_is_inf=True, bits=4,
+            use_device_prng=True, seed=sd,
+        ),
+        x, seed,
+    )
+    assert idx_s.shape == (8, 128) and idx_s.dtype == jnp.int8
+    assert norms_s.shape == (8,)
+    with pytest.raises(ValueError):
+        quantize_blocks(
+            x, None, levels, num_symbols=7, q_is_inf=True, use_device_prng=True
+        )  # no seed
 
 
 @settings(max_examples=10, deadline=None)

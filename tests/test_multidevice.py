@@ -9,7 +9,9 @@ import sys
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+_SRC = os.path.join(ROOT, "src")
+_PP = os.environ.get("PYTHONPATH")
+ENV = {**os.environ, "PYTHONPATH": _SRC + os.pathsep + _PP if _PP else _SRC}
 
 
 def _run(args, timeout=900):

@@ -50,6 +50,7 @@ os.environ["XLA_FLAGS"]="--xla_force_host_platform_device_count=4"
 import math
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 from repro.core.compressed_collectives import compressed_pmean_leafwise
 from repro.core.quantization import QuantConfig, uniform_levels
 mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
@@ -63,8 +64,8 @@ for bits, s in ((8, 15), (4, 5)):
         def f(tl, k):
             out = compressed_pmean_leafwise({"w": tl["w"][0]}, "data", LV, k, CFG)
             return {"w": out["w"][None]}
-        return jax.shard_map(f, mesh=mesh, in_specs=({"w": P("data",None,None)}, P()),
-                             out_specs={"w": P("data",None,None)}, check_vma=False)(t, key)
+        return shard_map(f, mesh=mesh, in_specs=({"w": P("data",None,None)}, P()),
+                         out_specs={"w": P("data",None,None)}, check_rep=False)(t, key)
     acc = 0
     T = 40
     for t in range(T):
@@ -77,10 +78,12 @@ print("ALL OK")
 
 
 def test_leafwise_exchange_unbiased_multidev():
+    src = os.path.join(ROOT, "src")
+    pp = os.environ.get("PYTHONPATH")
     r = subprocess.run(
         [sys.executable, "-c", _LEAFWISE_SCRIPT],
         cwd=ROOT,
-        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+        env={**os.environ, "PYTHONPATH": src + os.pathsep + pp if pp else src},
         capture_output=True, text=True, timeout=600,
     )
     assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]

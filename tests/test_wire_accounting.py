@@ -1,0 +1,131 @@
+"""Honest wire bytes: the analytic accounting must equal the byte-sizes of
+the buffers the exchange actually hands to the collectives, in every
+(bits, mode) combination — in particular, 4-bit mode must move the packed
+payload (~n/2 bytes), not unpacked int8 indices (the seed's 2x bug)."""
+
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressed_collectives import (
+    _quantize_2d,
+    exchange_buffer_bytes,
+    wire_bytes_per_device,
+)
+from repro.core.quantization import (
+    QuantConfig,
+    Quantized,
+    _pad_to_buckets,
+    quantize,
+    uniform_levels,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(bits, bucket=256):
+    return QuantConfig(
+        num_levels=5 if bits == 4 else 15, q_norm=math.inf,
+        bucket_size=bucket, bits=bits,
+    )
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("n", [4096, 5000, 100])  # incl. bucket padding
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_gathered_buffer_matches_analytic(bits, n, use_pallas):
+    """size x itemsize of the quantized payload+norms == exchange_buffer_bytes."""
+    cfg = _cfg(bits)
+    levels = uniform_levels(cfg.num_levels)
+    x = jax.random.normal(KEY, (n,), jnp.float32)
+    x2d, _ = _pad_to_buckets(x, cfg.bucket_size)
+    payload, norms = _quantize_2d(x2d, levels, KEY, cfg, use_pallas)
+    want = exchange_buffer_bytes(n, 8, cfg, "gather")
+    assert payload.size * payload.dtype.itemsize == want["gather_payload"]
+    assert norms.size * norms.dtype.itemsize == want["gather_norms"]
+    if bits == 4:
+        # packed: half a byte per (padded) coordinate — n/2, not n
+        nb = -(-n // cfg.bucket_size)
+        assert want["gather_payload"] == nb * cfg.bucket_size // 2
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("n", [4096, 5000])
+def test_quantized_wire_bytes_matches_payload_bytes(bits, n):
+    """Quantized.wire_bytes() (actual buffers) == QuantConfig.payload_bytes."""
+    cfg = _cfg(bits)
+    levels = uniform_levels(cfg.num_levels)
+    v = jax.random.normal(KEY, (n,), jnp.float32)
+    qt = quantize(v, levels, KEY, cfg)
+    assert isinstance(qt, Quantized)
+    assert qt.wire_bytes() == cfg.payload_bytes(n)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("mode", ["gather", "two_phase"])
+def test_wire_bytes_per_device_consistent(bits, mode):
+    """The transmit model is derived from the same buffer sizes."""
+    cfg = _cfg(bits)
+    n, K = 50000, 8
+    sizes = exchange_buffer_bytes(n, K, cfg, mode)
+    wb = wire_bytes_per_device(n, K, cfg, mode)
+    if mode == "gather":
+        assert wb == sum(sizes.values())
+    else:
+        a2a = sizes["a2a_payload"] + sizes["a2a_norms"]
+        g = sizes["gather_payload"] + sizes["gather_norms"]
+        assert wb == pytest.approx(a2a * (K - 1) / K + g)
+    # and 4-bit moves half the 8-bit payload
+    if bits == 4:
+        s8 = exchange_buffer_bytes(n, K, _cfg(8), mode)
+        for k in sizes:
+            if k.endswith("payload"):
+                assert sizes[k] == s8[k] // 2
+
+
+def test_fp32_baseline_unchanged():
+    assert wire_bytes_per_device(1000, 4, None) == 2 * (3 / 4) * 4000.0
+
+
+def test_bench_baseline_fused_hbm_model():
+    """The committed BENCH_kernels.json perf baseline must report the fused
+    dequant-reduce path at <= 0.25x the unfused pipeline's HBM traffic at
+    K=8 (the fusion's reason to exist)."""
+    import json
+    import re
+
+    path = os.path.join(ROOT, "BENCH_kernels.json")
+    with open(path) as f:
+        rows = json.load(f)["rows"]
+    fused = [
+        r for r in rows
+        if r["name"].startswith("dequant_reduce") and "_K8_" in r["name"]
+        and "hbm_model=" in r["derived"]
+    ]
+    assert fused, rows
+    for r in fused:
+        ratio = float(re.search(r"hbm_model=([0-9.]+)x", r["derived"]).group(1))
+        assert ratio <= 0.25, r
+
+
+def test_wire_accounting_and_int4_e2e_8dev():
+    """Subprocess (8 forced host devices): trace-recorded collective bytes
+    == analytic for all (bits, mode), and the exchange is bit-exact vs a
+    host-side jnp reference with identical noise (<= 1e-6)."""
+    src = os.path.join(ROOT, "src")
+    pp = os.environ.get("PYTHONPATH")
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_multidev_wire_accounting.py")],
+        cwd=ROOT,
+        env={**os.environ, "PYTHONPATH": src + os.pathsep + pp if pp else src},
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
