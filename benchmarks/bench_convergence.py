@@ -109,6 +109,27 @@ def run():
     )
     emit("qgenx_compression_rate_preservation", 0.0, derived)
 
+    # --- compressor registry: the same loop under other unbiased policies
+    from repro.core.exchange import ExchangeConfig
+
+    results = {}
+    for tag, exc in (
+        ("randk50", ExchangeConfig(compressor="randk", rand_frac=0.5)),
+        ("layerwise", ExchangeConfig(
+            compressor="layerwise",
+            quant=QuantConfig(num_levels=5, bits=4, bucket_size=64,
+                              q_norm=math.inf),
+            layerwise_threshold=16,
+        )),
+    ):
+        cfgq = QGenXConfig(variant="de", num_workers=4, exchange=exc)
+        st = qgenx_run(x0, oracle, cfgq, KEY, 2048)
+        results[tag] = (restricted_gap(vi, st.x_avg), float(st.bits_sent))
+    derived = ";".join(
+        f"{t}_gap={g:.4f};{t}_bits={b:.2e}" for t, (g, b) in results.items()
+    )
+    emit("exchange_registry_rate_preservation", 0.0, derived)
+
 
 if __name__ == "__main__":
     run()

@@ -11,18 +11,22 @@ column)."""
 import math
 
 from benchmarks.common import emit
+from repro.core.exchange import ExchangeConfig
 from repro.core.quantization import QuantConfig
 from repro.gan.wgan import GANConfig, train
 
 
 def run(steps: int = 200):
     results = {}
-    for tag, quant in (
+    for tag, exchange in (
         ("fp32", None),
-        ("uq8", QuantConfig(num_levels=15, bits=8, bucket_size=512, q_norm=math.inf)),
-        ("uq4", QuantConfig(num_levels=5, bits=4, bucket_size=512, q_norm=math.inf)),
+        ("uq8", ExchangeConfig(compressor="qgenx", quant=QuantConfig(
+            num_levels=15, bits=8, bucket_size=512, q_norm=math.inf))),
+        ("uq4", ExchangeConfig(compressor="qgenx", quant=QuantConfig(
+            num_levels=5, bits=4, bucket_size=512, q_norm=math.inf))),
+        ("randk25", ExchangeConfig(compressor="randk", rand_frac=0.25)),
     ):
-        cfg = GANConfig(num_workers=3, quant=quant)
+        cfg = GANConfig(num_workers=3, exchange=exchange)
         out = train(cfg, steps=steps, seed=0)
         results[tag] = out
         emit(
@@ -35,7 +39,7 @@ def run(steps: int = 200):
             ),
         )
     fp32b = results["fp32"]["bytes_per_step_per_worker"]
-    for tag in ("uq8", "uq4"):
+    for tag in ("uq8", "uq4", "randk25"):
         saving = fp32b / results[tag]["bytes_per_step_per_worker"]
         quality = results[tag]["energy_distance"] - results["fp32"]["energy_distance"]
         emit(f"fig1_summary_{tag}", 0.0,

@@ -142,7 +142,11 @@ def run():
 
     # derived wire bytes per setting (App. I trade-off inputs) — from the
     # exact collective-buffer accounting (exchange_buffer_bytes)
-    from repro.core.compressed_collectives import wire_bytes_per_device
+    from repro.core.exchange import (
+        ExchangeConfig,
+        make_exchange,
+        wire_bytes_per_device,
+    )
 
     n = 1 << 20
     for tag, cfg in (
@@ -154,6 +158,19 @@ def run():
             for K in (3, 16, 512):
                 b = wire_bytes_per_device(n, K, cfg, mode=mode)
                 emit(f"wire_bytes_{tag}_{mode}_K{K}", 0.0, f"bytes={b:.3e}")
+
+    # the registry's non-quantization compressors, same accounting surface
+    for tag, exc in (
+        ("randk1pct", ExchangeConfig(compressor="randk", rand_frac=0.01)),
+        ("layerwise", ExchangeConfig(
+            compressor="layerwise",
+            quant=QuantConfig(num_levels=5, bits=4, bucket_size=1024),
+        )),
+    ):
+        ex = make_exchange(exc)
+        for K in (3, 16, 512):
+            emit(f"wire_bytes_{tag}_K{K}", 0.0,
+                 f"bytes={ex.wire_bytes(n, K):.3e}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,15 @@
-"""Quickstart: the paper's machinery in 60 seconds.
+"""Quickstart: the paper's machinery in 60 seconds — via the Exchange API.
 
-1. Quantize a dual vector with adaptive levels (Definition 1 + QAda),
-   check unbiasedness and the Theorem 1 bound.
-2. Entropy-code it (Theorem 2) and report actual wire bits.
+1. Configure an Exchange (ExchangeConfig -> make_exchange): the one frozen
+   bundle carrying compressor choice, QuantConfig, collective mode and
+   kernel flags.  Quantize a dual vector with adaptive levels
+   (Definition 1 + QAda), check unbiasedness and the Theorem 1 bound.
+2. Entropy-code it (Theorem 2) and report actual wire bits, plus the
+   exchange's own analytic wire accounting (Exchange.wire_bytes).
 3. Solve a monotone VI (bilinear saddle) with Q-GenX under quantized
-   exchange, no step-size tuning (the adaptive rule does it).
+   exchange, no step-size tuning (the adaptive rule does it) — the same
+   Exchange seam the model-scale train step uses, so swapping the
+   compressor (qgenx -> randk) is a one-line config change.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -21,6 +26,7 @@ from repro.core.adaptive_levels import (
     optimize_levels,
     symbol_probabilities,
 )
+from repro.core.exchange import ExchangeConfig, make_exchange
 from repro.core.extragradient import QGenXConfig, qgenx_run
 from repro.core.quantization import (
     QuantConfig,
@@ -34,20 +40,28 @@ from repro.core.vi import absolute_noise_oracle, bilinear_saddle, restricted_gap
 
 key = jax.random.PRNGKey(0)
 
-# --- 1. adaptive quantization ------------------------------------------------
+# --- 1. an Exchange with adaptive quantization -------------------------------
 d, s = 4096, 7
 cfg = QuantConfig(num_levels=s, q_norm=math.inf, bucket_size=1024)
+ex = make_exchange(ExchangeConfig(compressor="qgenx", quant=cfg, mode="gather"))
+state = ex.init_state()  # explicit ExchangeState: level table + QAda stats
 v = jax.random.normal(key, (d,))
 v2d = v.reshape(-1, cfg.bucket_size)
 hist = normalized_coord_histogram(v2d, bucket_norms(v2d, cfg.q_norm))
-levels = optimize_levels(uniform_levels(s), hist)
+levels = optimize_levels(state.levels, hist)  # QAda refresh of the table
 print("QAda levels:", np.round(np.asarray(levels), 4))
 
+# the compressor contract: E[ex.compress(v)] = v (Definition 1, unbiased)
+keys = jax.random.split(key, 256)
+vbar = jnp.mean(jax.vmap(lambda k: ex.compress(v, state, k))(keys), axis=0)
+print(f"contract: |mean_256 compress(v) - v| = "
+      f"{float(jnp.abs(vbar - v).mean()):.4f} "
+      f"(one draw: {float(jnp.abs(ex.compress(v, state, key) - v).mean()):.4f})")
 emp = empirical_variance_multiplier(v, levels, cfg, key, trials=64)
 bound = theorem1_epsilon_q(np.asarray(levels), cfg.bucket_size, cfg.q_norm)
 print(f"Theorem 1: empirical eps_Q={emp:.4f} <= bound={bound:.4f}: {emp <= bound}")
 
-# --- 2. entropy coding ---------------------------------------------------------
+# --- 2. entropy coding + honest wire accounting ------------------------------
 qt = quantize(v, levels, key, cfg)
 p = np.maximum(np.asarray(symbol_probabilities(levels, hist), np.float64), 1e-12)
 p /= p.sum()
@@ -56,14 +70,22 @@ _, bits = coding.encode(np.asarray(qt.payload, np.int64), np.asarray(qt.norms),
                         method="huffman", codes=codes)
 print(f"Theorem 2: {bits} coded bits vs {32 * d} fp32 bits "
       f"({32 * d / bits:.1f}x saving); bound={coding.theorem2_expected_bits(p, d, qt.norms.size):.0f}")
+print(f"Exchange accounting: {ex.wire_bytes(d, axis_size=8):.0f} B/device "
+      f"collective operands at K=8 ({ex.compress_wire_bytes(d):.0f} B broadcast "
+      f"per worker) vs {4 * d} B fp32")
 
-# --- 3. Q-GenX on a monotone VI ------------------------------------------------
+# --- 3. Q-GenX on a monotone VI, compressor as a swappable policy -------------
 vi = bilinear_saddle(d=16, seed=0)
 oracle = absolute_noise_oracle(vi, sigma=0.5)
-for tag, quant in (("fp32", None), ("uq8", QuantConfig(num_levels=15, bucket_size=64))):
-    qcfg = QGenXConfig(variant="de", num_workers=4, quant=quant)
+for tag, exchange in (
+    ("fp32", None),
+    ("uq8", ExchangeConfig(compressor="qgenx",
+                           quant=QuantConfig(num_levels=15, bucket_size=64))),
+    ("randk", ExchangeConfig(compressor="randk", rand_frac=0.5)),
+):
+    qcfg = QGenXConfig(variant="de", num_workers=4, exchange=exchange)
     x0 = jnp.asarray(vi.z_star, jnp.float32) + 1.0
     st = qgenx_run(x0, oracle, qcfg, key, 2048)
-    print(f"Q-GenX[{tag}]  gap={restricted_gap(vi, st.x_avg):.4f}  "
+    print(f"Q-GenX[{tag:>5}]  gap={restricted_gap(vi, st.x_avg):.4f}  "
           f"bits/worker={float(st.bits_sent):.2e}")
 print("done.")

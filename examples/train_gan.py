@@ -7,6 +7,7 @@ Run: PYTHONPATH=src python examples/train_gan.py [--steps 300]
 import argparse
 import math
 
+from repro.core.exchange import ExchangeConfig
 from repro.core.quantization import QuantConfig
 from repro.gan.wgan import GANConfig, train
 
@@ -17,15 +18,22 @@ def main():
     ap.add_argument("--workers", type=int, default=3)
     args = ap.parse_args()
 
-    print(f"{'mode':>6} | {'energy_dist':>11} | {'ms/step':>8} | bytes/step/worker")
-    for tag, quant in (
+    uq8 = QuantConfig(num_levels=15, bits=8, bucket_size=512, q_norm=math.inf)
+    uq4 = QuantConfig(num_levels=5, bits=4, bucket_size=512, q_norm=math.inf)
+    print(f"{'mode':>9} | {'energy_dist':>11} | {'ms/step':>8} | bytes/step/worker")
+    for tag, exchange in (
         ("fp32", None),
-        ("uq8", QuantConfig(num_levels=15, bits=8, bucket_size=512, q_norm=math.inf)),
-        ("uq4", QuantConfig(num_levels=5, bits=4, bucket_size=512, q_norm=math.inf)),
+        ("uq8", ExchangeConfig(compressor="qgenx", quant=uq8)),
+        ("uq4", ExchangeConfig(compressor="qgenx", quant=uq4)),
+        ("randk25", ExchangeConfig(compressor="randk", rand_frac=0.25)),
+        # threshold below the 64x64=4096 hidden matrices so the big leaves
+        # actually take the low-bit path (policy is strict >)
+        ("layerwise", ExchangeConfig(compressor="layerwise", quant=uq4,
+                                     layerwise_threshold=2048)),
     ):
-        out = train(GANConfig(num_workers=args.workers, quant=quant),
+        out = train(GANConfig(num_workers=args.workers, exchange=exchange),
                     steps=args.steps, seed=0, log_every=0)
-        print(f"{tag:>6} | {out['energy_distance']:11.4f} | "
+        print(f"{tag:>9} | {out['energy_distance']:11.4f} | "
               f"{out['median_step_ms']:8.1f} | {out['bytes_per_step_per_worker']:.3e}")
 
 

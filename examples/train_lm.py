@@ -18,6 +18,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--compression", default="int8", choices=("none", "int8", "int4"))
+    ap.add_argument("--compressor", default="qgenx",
+                    choices=("qgenx", "randk", "layerwise", "none"))
+    ap.add_argument("--level-schedule", default="fixed", choices=("fixed", "qada"))
     args = ap.parse_args()
     cmd = [
         sys.executable, "-m", "repro.launch.train",
@@ -26,10 +29,14 @@ def main():
         "--steps", str(args.steps),
         "--batch", "16", "--seq", "128",
         "--compression", args.compression,
+        "--compressor", args.compressor,
         "--compress-axis", "data",
+        "--level-schedule", args.level_schedule,
         "--optimizer", "extra_adam",
         "--log-every", "10",
     ]
+    if args.level_schedule == "qada":
+        cmd += ["--level-update-every", "10"]
     print("+", " ".join(cmd))
     raise SystemExit(subprocess.call(cmd))
 

@@ -6,7 +6,9 @@ Subpackage layout:
   coding.py         — entropy coding + Theorem 2 accounting (App. K)
   extragradient.py  — Q-GenX update rule + DA/DE/OptDA variants
   vi.py             — monotone VI test problems + noise oracles
-  compressed_collectives.py — quantized all-reduce under shard_map
+  exchange.py       — unified Exchange API: pluggable compressors, explicit
+                      ExchangeState, fused-kernel routing, wire accounting
+  compressed_collectives.py — DEPRECATED thin wrappers over exchange.py
 """
 
 from repro.core.quantization import (  # noqa: F401
@@ -27,4 +29,12 @@ from repro.core.adaptive_levels import (  # noqa: F401
     optimize_levels,
     expected_variance,
     symbol_probabilities,
+)
+from repro.core.exchange import (  # noqa: F401
+    Exchange,
+    ExchangeConfig,
+    ExchangeState,
+    make_exchange,
+    null_exchange_state,
+    registered_compressors,
 )

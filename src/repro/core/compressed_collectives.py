@@ -1,222 +1,56 @@
-"""Quantized gradient collectives under shard_map (Algorithm 1 on TPU).
+"""DEPRECATED — thin wrappers over :mod:`repro.core.exchange`.
 
-Algorithm 1's communication step is: each worker broadcasts CODE o Q(V_k),
-every worker decodes and averages.  On TPU/XLA there is no in-collective
-reduction hook (NCCL-style compressed ring all-reduce does not exist), so
-we implement the two standard schemes explicitly, both moving the *packed*
-fixed-width payload on the wire (int8, or two-per-byte int4 — never
-unpacked indices, never f32):
+The quantized collectives moved into the unified Exchange API
+(``ExchangeConfig`` + ``make_exchange``), which carries the full
+``(levels, key, cfg, mode, use_pallas, use_device_prng, interpret)``
+bundle as one frozen config and threads QAda state explicitly.  These
+wrappers delegate to the exact same implementation (bit-exact with the
+pre-refactor behavior, including key folding and the packed wire format)
+and exist only so older call sites keep working.
 
-* ``mode="gather"`` — quantize the local dual vector, ``all_gather`` the
-  payload (+ per-bucket f32 norms) over the axis, then one fused
-  dequantize+mean kernel produces the average (the K gathered payloads are
-  read once; no intermediate f32 buffers).  Wire: K * d * per
-  bytes/device (per = 1 int8, 1/2 int4; vs 4Kd for f32 all-gather).
-  Faithful to Algorithm 1's broadcast semantics; best for small K (the
-  paper's 3-node experiment).
+New code should do::
 
-* ``mode="two_phase"`` — reduce-scatter-style: split the vector into K
-  chunks, quantize, ``all_to_all`` (each device receives everyone's copy
-  of *its* chunk), then one fused dequantize+mean+requantize kernel turns
-  the K received payloads directly into the re-quantized reduced chunk
-  (the f32 chunk mean never touches HBM), and ``all_gather`` the reduced
-  chunks.  Wire: ~2 * d * per bytes/device, independent of K — the right
-  choice for the 16-32-way data/pod axes of the production mesh.  The
-  second quantization is also unbiased, so the aggregate remains an
-  unbiased dual vector (Theorem 1 composes: (1+eps_Q)^2 - 1 total
-  multiplier).
-
-``use_pallas=True`` routes the hot path through the fused Pallas kernels
-(interpret mode on CPU); the default jnp reference path computes the same
-exchange unfused — bit-identically, including the packed wire format.
-``use_device_prng=True`` (Pallas on real TPU only) additionally skips
-generating and re-reading the full-size f32 stochastic-rounding noise
-buffer: the kernels draw their bits from the on-core PRNG (DESIGN.md
-§Hardware adaptation).
-
-The pytree entry point :func:`compressed_pmean_tree` fuses all leaves into
-one flat vector (bucket fusion — what CGX/DDP do) so bucket norms amortize
-and one collective moves everything.
-
-Wire accounting: :func:`exchange_buffer_bytes` returns the exact
-byte-sizes of every buffer handed to a collective, and the module can
-record the operands it actually passes (``wire_trace_start`` /
-``wire_trace_stop`` — trace-time, zero runtime cost) so tests assert the
-two agree.
+    from repro.core.exchange import ExchangeConfig, make_exchange
+    ex = make_exchange(ExchangeConfig(compressor="qgenx", quant=cfg,
+                                      axis_name=axis_name, mode=mode))
+    state = ex.init_state()
+    mean, state = ex.pmean(x, state, key)
 """
 
 from __future__ import annotations
 
-import math
+import warnings
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.quantization import (
-    QuantConfig,
-    _pad_to_buckets,
+# Re-exported: the wire accounting + kernel dispatch helpers now live in
+# repro.core.exchange (same module-level trace recorder — cc.wire_trace_*
+# and exchange.wire_trace_* observe the same recording).
+from repro.core.exchange import (  # noqa: F401
+    _axis_key,
+    _dequantize_2d,
+    _qgenx_pmean,
+    _qgenx_pmean_leafwise,
+    _quantize_2d,
+    _record_wire,
+    exchange_buffer_bytes,
+    wire_bytes_per_device,
+    wire_trace_start,
+    wire_trace_stop,
 )
-from repro.kernels.common import derive_prng_seed, pack4_rows, unpack4_rows
-from repro.kernels.dequant_reduce import (
-    dequant_reduce_blocks,
-    dequant_reduce_requantize_blocks,
-)
-from repro.kernels.dequantize import dequantize_blocks
-from repro.kernels.quantize import quantize_blocks
+from repro.core.quantization import QuantConfig
 
 Array = jax.Array
 
 
-# ---------------------------------------------------------------------------
-# Wire accounting
-# ---------------------------------------------------------------------------
-
-_WIRE_TRACE: Optional[list] = None
-
-
-def wire_trace_start() -> None:
-    """Begin recording (name, nbytes) for every collective operand.
-
-    Recording happens at *trace* time (shapes are static), so it works
-    under jit/shard_map — but only when the enclosing function is actually
-    traced; re-running a cached jit records nothing.
-    """
-    global _WIRE_TRACE
-    _WIRE_TRACE = []
-
-
-def wire_trace_stop() -> list:
-    global _WIRE_TRACE
-    rec, _WIRE_TRACE = _WIRE_TRACE, None
-    return rec or []
-
-
-def _record_wire(name: str, arr) -> None:
-    if _WIRE_TRACE is not None:
-        _WIRE_TRACE.append((name, int(arr.size) * arr.dtype.itemsize))
-
-
-def exchange_buffer_bytes(
-    n: int, axis_size: int, cfg: QuantConfig, mode: str = "two_phase"
-) -> dict:
-    """Exact sizes (bytes) of each buffer one device hands to a collective.
-
-    Matches ``size * itemsize`` of the arrays :func:`compressed_pmean`
-    passes to ``all_gather`` / ``all_to_all`` — the honest wire numbers,
-    including bucket/chunk padding and int4 packing.
-    """
-    per = 1.0 if cfg.bits == 8 else 0.5
-    b = cfg.bucket_size
-    if mode == "gather":
-        nb = -(-n // b)
-        return {"gather_payload": int(nb * b * per), "gather_norms": 4 * nb}
-    if mode == "two_phase":
-        quota = axis_size * b
-        n_pad = -(-n // quota) * quota
-        nb = n_pad // b
-        nb_per_chunk = nb // axis_size
-        return {
-            "a2a_payload": int(n_pad * per),
-            "a2a_norms": 4 * nb,
-            "gather_payload": int(nb_per_chunk * b * per),
-            "gather_norms": 4 * nb_per_chunk,
-        }
-    raise ValueError(f"unknown mode {mode!r}")
-
-
-def wire_bytes_per_device(
-    n: int, axis_size: int, cfg: Optional[QuantConfig], mode: str = "two_phase"
-) -> float:
-    """Analytic bytes each device *transmits* per reduction (EXPERIMENTS).
-
-    Derived from :func:`exchange_buffer_bytes` (the actual collective
-    operands): an ``all_gather`` operand is injected into the network once
-    (broadcast semantics); a tiled ``all_to_all`` keeps 1/K of the buffer
-    local and transmits the remaining (K-1)/K.
-    """
-    if cfg is None:
-        # ring all-reduce of f32: 2 * (K-1)/K * 4n
-        return 2 * (axis_size - 1) / axis_size * 4.0 * n
-    sizes = exchange_buffer_bytes(n, axis_size, cfg, mode)
-    if mode == "gather":
-        return float(sizes["gather_payload"] + sizes["gather_norms"])
-    a2a = sizes["a2a_payload"] + sizes["a2a_norms"]
-    gather = sizes["gather_payload"] + sizes["gather_norms"]
-    return float(a2a * (axis_size - 1) / axis_size + gather)
-
-
-# ---------------------------------------------------------------------------
-# Quantize / dequantize dispatch (Pallas kernels vs jnp reference)
-# ---------------------------------------------------------------------------
-
-
-def _quantize_2d(
-    x2d,
-    levels,
-    key,
-    cfg: QuantConfig,
-    use_pallas: bool,
-    *,
-    use_device_prng: bool = False,
-    interpret: bool = True,
-):
-    """[nb, bucket] f32 -> (wire payload [nb, P], norms [nb]).
-
-    P = bucket (8-bit) or bucket/2 (packed 4-bit) — both the Pallas and
-    the jnp reference path emit the *packed* wire payload.  With
-    ``use_device_prng`` (Pallas on TPU) no host noise buffer is created:
-    only a [1] int32 seed derived from ``key`` reaches the kernel.
-    """
-    q_is_inf = math.isinf(cfg.q_norm)
-    if use_device_prng and not use_pallas:
-        raise ValueError(
-            "use_device_prng requires use_pallas=True (the jnp reference "
-            "path has no on-core PRNG and would silently fall back to the "
-            "full-size host noise buffer)"
-        )
-    if use_pallas and use_device_prng:
-        seed = derive_prng_seed(key)
-        return quantize_blocks(
-            x2d, None, levels,
-            num_symbols=cfg.num_symbols, q_is_inf=q_is_inf, bits=cfg.bits,
-            use_device_prng=True, seed=seed, interpret=interpret,
-        )
-    noise = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
-    if use_pallas:
-        return quantize_blocks(
-            x2d, noise, levels,
-            num_symbols=cfg.num_symbols, q_is_inf=q_is_inf, bits=cfg.bits,
-            interpret=interpret,
-        )
-    from repro.kernels.ref import quantize_blocks_ref
-
-    return quantize_blocks_ref(x2d, noise, levels, q_is_inf=q_is_inf, bits=cfg.bits)
-
-
-def _dequantize_2d(
-    payload2d, norms, levels, cfg: QuantConfig, use_pallas: bool,
-    *, interpret: bool = True,
-):
-    """Wire payload [nb, P] -> [nb, bucket] f32 (unpacks in 4-bit mode)."""
-    if use_pallas:
-        return dequantize_blocks(
-            payload2d, norms, levels, num_symbols=cfg.num_symbols, bits=cfg.bits,
-            interpret=interpret,
-        )
-    from repro.kernels.ref import dequantize_blocks_ref
-
-    return dequantize_blocks_ref(payload2d, norms, levels, bits=cfg.bits)
-
-
-def _axis_key(key: Array, axis_name) -> Array:
-    """Per-device independent key (independent quantization noise)."""
-    return jax.random.fold_in(key, jax.lax.axis_index(axis_name))
-
-
-# ---------------------------------------------------------------------------
-# The exchange
-# ---------------------------------------------------------------------------
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.compressed_collectives.{name} is deprecated; use "
+        "repro.core.exchange.make_exchange",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def compressed_pmean(
@@ -230,103 +64,12 @@ def compressed_pmean(
     use_device_prng: bool = False,
     interpret: bool = True,
 ) -> Array:
-    """Unbiased quantized mean-reduction of a flat vector over ``axis_name``.
-
-    Must be called inside shard_map with ``axis_name`` in scope. ``x`` is
-    each device's local full vector (e.g. its data-parallel gradient).
-    ``interpret=False`` compiles the Pallas kernels (real TPU); the default
-    interpret mode is for this CPU container.
-    """
-    key = _axis_key(key, axis_name)
-    k1, k2 = jax.random.split(key)
-    n = x.shape[0]
-    # psum of a Python literal is evaluated at trace time -> static size
-    axis_size = jax.lax.psum(1, axis_name)
-    bucket = cfg.bucket_size
-
-    if mode == "gather":
-        x2d, _ = _pad_to_buckets(x, bucket)
-        payload, norms = _quantize_2d(
-            x2d, levels, k1, cfg, use_pallas,
-            use_device_prng=use_device_prng, interpret=interpret,
-        )
-        _record_wire("gather_payload", payload)
-        _record_wire("gather_norms", norms)
-        all_p = jax.lax.all_gather(payload, axis_name)  # [K, nb, P] int8
-        all_norms = jax.lax.all_gather(norms, axis_name)  # [K, nb] f32
-        nb = x2d.shape[0]
-        if use_pallas:
-            # fused consumer: K payloads stream through VMEM, only the
-            # final mean is written — no K intermediate f32 buffers.
-            mean2d = dequant_reduce_blocks(
-                all_p, all_norms, levels,
-                num_symbols=cfg.num_symbols, num_workers=axis_size, bits=cfg.bits,
-                interpret=interpret,
-            )
-            return mean2d.reshape(-1)[:n]
-        deq = _dequantize_2d(
-            all_p.reshape(axis_size * nb, -1),
-            all_norms.reshape(axis_size * nb),
-            levels, cfg, use_pallas, interpret=interpret,
-        ).reshape(axis_size, nb * bucket)
-        return jnp.mean(deq, axis=0)[:n]
-
-    if mode == "two_phase":
-        # pad so n splits into K chunks of whole buckets
-        chunk_quota = axis_size * bucket
-        n_pad = -(-n // chunk_quota) * chunk_quota
-        xp = jnp.pad(x, (0, n_pad - n))
-        chunk = n_pad // axis_size
-        nb_per_chunk = chunk // bucket
-        x2d = xp.reshape(axis_size * nb_per_chunk, bucket)
-        payload, norms = _quantize_2d(
-            x2d, levels, k1, cfg, use_pallas,
-            use_device_prng=use_device_prng, interpret=interpret,
-        )
-        # [K, nb_per_chunk, P] — row k is the chunk destined to device k
-        payload = payload.reshape(axis_size, nb_per_chunk, -1)
-        norms = norms.reshape(axis_size, nb_per_chunk)
-        _record_wire("a2a_payload", payload)
-        _record_wire("a2a_norms", norms)
-        # all_to_all: device k receives everyone's copy of chunk k
-        p_t = jax.lax.all_to_all(payload, axis_name, split_axis=0, concat_axis=0, tiled=True)
-        n_t = jax.lax.all_to_all(norms, axis_name, split_axis=0, concat_axis=0, tiled=True)
-        if use_pallas:
-            # fused middle step: DEQ + mean + requantize in one kernel —
-            # the reduced f32 chunk never leaves VMEM.
-            if use_device_prng:
-                noise2 = None
-                seed2 = derive_prng_seed(k2)
-            else:
-                noise2 = jax.random.uniform(k2, (nb_per_chunk, bucket), jnp.float32)
-                seed2 = None
-            ridx, rnorms = dequant_reduce_requantize_blocks(
-                p_t, n_t, levels, noise2,
-                num_symbols=cfg.num_symbols, num_workers=axis_size,
-                q_is_inf=math.isinf(cfg.q_norm), bits=cfg.bits,
-                use_device_prng=use_device_prng, seed=seed2, interpret=interpret,
-            )
-        else:
-            deq = _dequantize_2d(
-                p_t.reshape(axis_size * nb_per_chunk, -1),
-                n_t.reshape(axis_size * nb_per_chunk),
-                levels, cfg, use_pallas, interpret=interpret,
-            ).reshape(axis_size, chunk)
-            reduced = jnp.mean(deq, axis=0)  # this device's chunk of the mean
-            # re-quantize (unbiased) and share the reduced chunk
-            r2d = reduced.reshape(nb_per_chunk, bucket)
-            ridx, rnorms = _quantize_2d(
-                r2d, levels, k2, cfg, use_pallas, interpret=interpret
-            )
-        _record_wire("gather_payload", ridx)
-        _record_wire("gather_norms", rnorms)
-        g_idx = jax.lax.all_gather(ridx, axis_name, tiled=True)
-        g_norms = jax.lax.all_gather(rnorms, axis_name, tiled=True)
-        out = _dequantize_2d(g_idx, g_norms, levels, cfg, use_pallas,
-                             interpret=interpret)
-        return out.reshape(-1)[:n]
-
-    raise ValueError(f"unknown mode {mode!r}")
+    """Deprecated alias of the qgenx flat exchange (see module docstring)."""
+    _warn("compressed_pmean")
+    return _qgenx_pmean(
+        x, axis_name, levels, key, cfg, mode, use_pallas, use_device_prng,
+        interpret,
+    )
 
 
 def compressed_pmean_tree(
@@ -340,24 +83,27 @@ def compressed_pmean_tree(
     use_device_prng: bool = False,
     interpret: bool = True,
 ):
-    """Quantized pmean of a gradient pytree (bucket-fused).
+    """Deprecated alias of the bucket-fused qgenx tree exchange.
 
     ``cfg=None`` falls back to the exact ``jax.lax.pmean`` (the FP32
     baseline of the paper's Figure 1).
     """
+    _warn("compressed_pmean_tree")
     if cfg is None:
         return jax.lax.pmean(tree, axis_name)
+    import jax.numpy as jnp
+
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     sizes = [l.size for l in leaves]
     flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-    out = compressed_pmean(
+    out = _qgenx_pmean(
         flat, axis_name, levels, key, cfg, mode, use_pallas, use_device_prng,
         interpret,
     )
     outs = []
     off = 0
     for l, sz in zip(leaves, sizes):
-        outs.append(out[off : off + sz].reshape(l.shape).astype(l.dtype))
+        outs.append(out[off: off + sz].reshape(l.shape).astype(l.dtype))
         off += sz
     return jax.tree_util.tree_unflatten(treedef, outs)
 
@@ -369,60 +115,6 @@ def compressed_pmean_leafwise(
     key: Array,
     cfg: Optional[QuantConfig],
 ):
-    """Quantized pmean that PRESERVES inner (auto-axis) shardings.
-
-    For use inside ``shard_map(..., axis_names={axis_name})`` where the
-    other mesh axes stay under GSPMD: the flat-concat path
-    (:func:`compressed_pmean_tree`) reshapes every leaf, which forces XLA
-    to re-gather the inner-sharded gradients.  Here each leaf is quantized
-    *in place* — per-row L^q norms over the last dim (the "bucket" is the
-    trailing dimension), elementwise stochastic rounding, int8 payload of
-    identical shape — so only the ``all_gather`` over the manual axis moves
-    data, and it moves int8 (packed int4 when the trailing dim is even).
-
-    Semantically still Definition 1 (unbiased, normalized quantization);
-    the bucket size is the leaf's trailing dim instead of a fixed 1024 —
-    Theorem 1 holds with d = trailing dim.
-    """
-    if cfg is None:
-        return jax.lax.pmean(tree, axis_name)
-    from repro.core.quantization import _stochastic_round_indices
-
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(_axis_key(key, axis_name), len(leaves))
-    out = []
-    lv = levels.astype(jnp.float32)
-    for g, k in zip(leaves, keys):
-        gf = g.astype(jnp.float32)
-        if math.isinf(cfg.q_norm):
-            norms = jnp.max(jnp.abs(gf), axis=-1, keepdims=True)
-        else:
-            norms = jnp.sqrt(jnp.sum(gf * gf, axis=-1, keepdims=True))
-        safe = jnp.where(norms > 0, norms, 1.0)
-        u = jnp.clip(jnp.abs(gf) / safe, 0.0, 1.0)
-        idx = _stochastic_round_indices(u, lv, k, cfg.stochastic)
-        signed = jnp.where(gf < 0, -idx, idx)
-        # the only cross-device traffic: int8/int4 payload + f32 row norms
-        # (packing reuses the kernels' wire-format helpers — one layout)
-        d = g.shape[-1]
-        pack4 = cfg.bits == 4 and d % 2 == 0
-        if pack4:
-            payload = pack4_rows(signed.reshape(-1, d)).reshape(
-                g.shape[:-1] + (d // 2,)
-            )
-        else:
-            payload = signed.astype(jnp.int8)
-        _record_wire("leaf_payload", payload)
-        _record_wire("leaf_norms", norms)
-        all_p = jax.lax.all_gather(payload, axis_name)  # [K, ...]
-        all_norms = jax.lax.all_gather(norms, axis_name)
-        if pack4:
-            all_idx = unpack4_rows(all_p.reshape(-1, d // 2)).reshape(
-                all_p.shape[:-1] + (d,)
-            )
-        else:
-            all_idx = all_p.astype(jnp.int32)
-        mag = jnp.abs(all_idx)
-        vals = lv[mag] * jnp.sign(all_idx.astype(jnp.float32)) * all_norms
-        out.append(jnp.mean(vals, axis=0).astype(g.dtype))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    """Deprecated alias of the sharding-preserving leafwise exchange."""
+    _warn("compressed_pmean_leafwise")
+    return _qgenx_pmean_leafwise(tree, axis_name, levels, key, cfg)

@@ -1,0 +1,1082 @@
+"""Unified Exchange API — the single seam for Algorithm 1's communication.
+
+Everything the repo previously threaded by hand through ``compressed_pmean*``
+call sites — ``(levels, key, cfg, mode, use_pallas, use_device_prng,
+interpret)`` — is captured once in an :class:`ExchangeConfig` (frozen,
+hashable, safe as a jit static argument), and :func:`make_exchange` returns
+an :class:`Exchange` whose methods are usable inside ``shard_map``:
+
+    ex = make_exchange(ExchangeConfig(compressor="qgenx", quant=qcfg,
+                                      axis_name="data", mode="two_phase"))
+    state = ex.init_state()
+    mean, state = ex.pmean(x, state, key)          # flat vector
+    tree, state = ex.pmean_tree(grads, state, key) # pytree (bucket-fused)
+
+All stateful pieces — the quantization level table and the QAda sufficient
+statistics (Section 3.3) — live in an explicit :class:`ExchangeState`
+pytree that the caller threads through its step function, which is what
+makes adaptive levels available in model-scale training (the train step
+carries the state; level refreshes are visible in it).
+
+Compressors are a registry (:func:`register_compressor`) behind one
+contract — ``E[compress(v)] = v`` (unbiasedness, Definition 1 / Theorem 1
+of the paper; the same property the wider unbiased-compressor family of
+Beznosikov et al. relies on):
+
+* ``none``      — exact ``lax.pmean`` (FP32 control, still shard_map-routed).
+* ``qgenx``     — the paper's bucketed stochastic quantization, bit-exact
+  with the legacy ``compressed_pmean`` path (gather / two_phase / leafwise
+  modes, fused Pallas kernels, packed int4 wire format).
+* ``randk``     — unbiased rand-K sparsification: each worker keeps a
+  uniform random subset of ``rand_frac * n`` coordinates scaled by
+  ``n / k`` (classic Rand-K; value+index wire format).
+* ``layerwise`` — per-leaf bit-width policy (Nguyen et al., layer-wise
+  quantization): large leaves take the aggressive low-bit config, small
+  leaves a conservative 8-bit one, each group bucket-fused separately.
+
+Wire accounting is honest and lives here too: :func:`exchange_buffer_bytes`
+returns the exact byte-sizes of the buffers handed to collectives, the
+trace-time recorder (:func:`wire_trace_start` / :func:`wire_trace_stop`)
+captures what was actually passed, and ``Exchange.wire_bytes`` /
+``Exchange.wire_bytes_tree`` return the same numbers analytically so the
+train step can emit a ``wire_bytes`` metric that tests assert equal to the
+recorder.
+
+``repro.core.compressed_collectives`` remains as thin deprecated wrappers
+over this module so pre-existing call sites stay bit-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptive_levels as qada
+from repro.core.quantization import (
+    QuantConfig,
+    _pad_to_buckets,
+    bucket_norms,
+    quantize_dequantize,
+    quantize_dequantize_pytree,
+    uniform_levels,
+)
+from repro.kernels.common import derive_prng_seed, pack4_rows, unpack4_rows
+from repro.kernels.dequant_reduce import (
+    dequant_reduce_blocks,
+    dequant_reduce_requantize_blocks,
+)
+from repro.kernels.dequantize import dequantize_blocks
+from repro.kernels.quantize import quantize_blocks
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting (trace-time recorder + analytic buffer sizes)
+# ---------------------------------------------------------------------------
+
+_WIRE_TRACE: Optional[list] = None
+
+
+def wire_trace_start() -> None:
+    """Begin recording (name, nbytes) for every collective operand.
+
+    Recording happens at *trace* time (shapes are static), so it works
+    under jit/shard_map — but only when the enclosing function is actually
+    traced; re-running a cached jit records nothing.
+    """
+    global _WIRE_TRACE
+    _WIRE_TRACE = []
+
+
+def wire_trace_stop() -> list:
+    global _WIRE_TRACE
+    rec, _WIRE_TRACE = _WIRE_TRACE, None
+    return rec or []
+
+
+def _record_wire(name: str, arr) -> None:
+    if _WIRE_TRACE is not None:
+        _WIRE_TRACE.append((name, int(arr.size) * arr.dtype.itemsize))
+
+
+def exchange_buffer_bytes(
+    n: int, axis_size: int, cfg: QuantConfig, mode: str = "two_phase"
+) -> dict:
+    """Exact sizes (bytes) of each buffer one device hands to a collective.
+
+    Matches ``size * itemsize`` of the arrays the qgenx exchange passes to
+    ``all_gather`` / ``all_to_all`` — the honest wire numbers, including
+    bucket/chunk padding and int4 packing.
+    """
+    per = 1.0 if cfg.bits == 8 else 0.5
+    b = cfg.bucket_size
+    if mode == "gather":
+        nb = -(-n // b)
+        return {"gather_payload": int(nb * b * per), "gather_norms": 4 * nb}
+    if mode == "two_phase":
+        quota = axis_size * b
+        n_pad = -(-n // quota) * quota
+        nb = n_pad // b
+        nb_per_chunk = nb // axis_size
+        return {
+            "a2a_payload": int(n_pad * per),
+            "a2a_norms": 4 * nb,
+            "gather_payload": int(nb_per_chunk * b * per),
+            "gather_norms": 4 * nb_per_chunk,
+        }
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def leafwise_buffer_bytes(shape: tuple, cfg: QuantConfig) -> dict:
+    """Collective-operand bytes for one leaf of the leafwise exchange.
+
+    Mirrors the payload/norms arrays ``_qgenx_pmean_leafwise`` records:
+    the payload keeps the leaf's shape (trailing dim halved when packed
+    int4 applies) and there is one f32 norm per trailing row.
+    """
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    pack4 = cfg.bits == 4 and d % 2 == 0
+    payload = rows * (d // 2 if pack4 else d)
+    return {"leaf_payload": payload, "leaf_norms": 4 * rows}
+
+
+def wire_bytes_per_device(
+    n: int, axis_size: int, cfg: Optional[QuantConfig], mode: str = "two_phase"
+) -> float:
+    """Analytic bytes each device *transmits* per reduction (EXPERIMENTS).
+
+    Derived from :func:`exchange_buffer_bytes` (the actual collective
+    operands): an ``all_gather`` operand is injected into the network once
+    (broadcast semantics); a tiled ``all_to_all`` keeps 1/K of the buffer
+    local and transmits the remaining (K-1)/K.
+    """
+    if cfg is None:
+        # ring all-reduce of f32: 2 * (K-1)/K * 4n
+        return 2 * (axis_size - 1) / axis_size * 4.0 * n
+    sizes = exchange_buffer_bytes(n, axis_size, cfg, mode)
+    if mode == "gather":
+        return float(sizes["gather_payload"] + sizes["gather_norms"])
+    a2a = sizes["a2a_payload"] + sizes["a2a_norms"]
+    gather = sizes["gather_payload"] + sizes["gather_norms"]
+    return float(a2a * (axis_size - 1) / axis_size + gather)
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize dispatch (Pallas kernels vs jnp reference)
+# ---------------------------------------------------------------------------
+
+
+def _quantize_2d(
+    x2d,
+    levels,
+    key,
+    cfg: QuantConfig,
+    use_pallas: bool,
+    *,
+    use_device_prng: bool = False,
+    interpret: bool = True,
+):
+    """[nb, bucket] f32 -> (wire payload [nb, P], norms [nb]).
+
+    P = bucket (8-bit) or bucket/2 (packed 4-bit) — both the Pallas and
+    the jnp reference path emit the *packed* wire payload.  With
+    ``use_device_prng`` (Pallas on TPU) no host noise buffer is created:
+    only a [1] int32 seed derived from ``key`` reaches the kernel.
+    """
+    q_is_inf = math.isinf(cfg.q_norm)
+    if use_device_prng and not use_pallas:
+        raise ValueError(
+            "use_device_prng requires use_pallas=True (the jnp reference "
+            "path has no on-core PRNG and would silently fall back to the "
+            "full-size host noise buffer)"
+        )
+    if use_pallas and use_device_prng:
+        seed = derive_prng_seed(key)
+        return quantize_blocks(
+            x2d, None, levels,
+            num_symbols=cfg.num_symbols, q_is_inf=q_is_inf, bits=cfg.bits,
+            use_device_prng=True, seed=seed, interpret=interpret,
+        )
+    noise = jax.random.uniform(key, x2d.shape, dtype=jnp.float32)
+    if use_pallas:
+        return quantize_blocks(
+            x2d, noise, levels,
+            num_symbols=cfg.num_symbols, q_is_inf=q_is_inf, bits=cfg.bits,
+            interpret=interpret,
+        )
+    from repro.kernels.ref import quantize_blocks_ref
+
+    return quantize_blocks_ref(x2d, noise, levels, q_is_inf=q_is_inf, bits=cfg.bits)
+
+
+def _dequantize_2d(
+    payload2d, norms, levels, cfg: QuantConfig, use_pallas: bool,
+    *, interpret: bool = True,
+):
+    """Wire payload [nb, P] -> [nb, bucket] f32 (unpacks in 4-bit mode)."""
+    if use_pallas:
+        return dequantize_blocks(
+            payload2d, norms, levels, num_symbols=cfg.num_symbols, bits=cfg.bits,
+            interpret=interpret,
+        )
+    from repro.kernels.ref import dequantize_blocks_ref
+
+    return dequantize_blocks_ref(payload2d, norms, levels, bits=cfg.bits)
+
+
+def _axis_key(key: Array, axis_name) -> Array:
+    """Per-device independent key (independent quantization noise)."""
+    return jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+
+
+# ---------------------------------------------------------------------------
+# The qgenx exchange primitives (Algorithm 1 on the wire)
+# ---------------------------------------------------------------------------
+
+
+def _qgenx_pmean(
+    x: Array,
+    axis_name,
+    levels: Array,
+    key: Array,
+    cfg: QuantConfig,
+    mode: str = "two_phase",
+    use_pallas: bool = False,
+    use_device_prng: bool = False,
+    interpret: bool = True,
+) -> Array:
+    """Unbiased quantized mean-reduction of a flat vector over ``axis_name``.
+
+    Must be called inside shard_map with ``axis_name`` in scope. ``x`` is
+    each device's local full vector (e.g. its data-parallel gradient).
+    ``interpret=False`` compiles the Pallas kernels (real TPU); the default
+    interpret mode is for this CPU container.
+    """
+    key = _axis_key(key, axis_name)
+    k1, k2 = jax.random.split(key)
+    n = x.shape[0]
+    # psum of a Python literal is evaluated at trace time -> static size
+    axis_size = jax.lax.psum(1, axis_name)
+    bucket = cfg.bucket_size
+
+    if mode == "gather":
+        x2d, _ = _pad_to_buckets(x, bucket)
+        payload, norms = _quantize_2d(
+            x2d, levels, k1, cfg, use_pallas,
+            use_device_prng=use_device_prng, interpret=interpret,
+        )
+        _record_wire("gather_payload", payload)
+        _record_wire("gather_norms", norms)
+        all_p = jax.lax.all_gather(payload, axis_name)  # [K, nb, P] int8
+        all_norms = jax.lax.all_gather(norms, axis_name)  # [K, nb] f32
+        nb = x2d.shape[0]
+        if use_pallas:
+            # fused consumer: K payloads stream through VMEM, only the
+            # final mean is written — no K intermediate f32 buffers.
+            mean2d = dequant_reduce_blocks(
+                all_p, all_norms, levels,
+                num_symbols=cfg.num_symbols, num_workers=axis_size, bits=cfg.bits,
+                interpret=interpret,
+            )
+            return mean2d.reshape(-1)[:n]
+        deq = _dequantize_2d(
+            all_p.reshape(axis_size * nb, -1),
+            all_norms.reshape(axis_size * nb),
+            levels, cfg, use_pallas, interpret=interpret,
+        ).reshape(axis_size, nb * bucket)
+        return jnp.mean(deq, axis=0)[:n]
+
+    if mode == "two_phase":
+        # pad so n splits into K chunks of whole buckets
+        chunk_quota = axis_size * bucket
+        n_pad = -(-n // chunk_quota) * chunk_quota
+        xp = jnp.pad(x, (0, n_pad - n))
+        chunk = n_pad // axis_size
+        nb_per_chunk = chunk // bucket
+        x2d = xp.reshape(axis_size * nb_per_chunk, bucket)
+        payload, norms = _quantize_2d(
+            x2d, levels, k1, cfg, use_pallas,
+            use_device_prng=use_device_prng, interpret=interpret,
+        )
+        # [K, nb_per_chunk, P] — row k is the chunk destined to device k
+        payload = payload.reshape(axis_size, nb_per_chunk, -1)
+        norms = norms.reshape(axis_size, nb_per_chunk)
+        _record_wire("a2a_payload", payload)
+        _record_wire("a2a_norms", norms)
+        # all_to_all: device k receives everyone's copy of chunk k
+        p_t = jax.lax.all_to_all(payload, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        n_t = jax.lax.all_to_all(norms, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        if use_pallas:
+            # fused middle step: DEQ + mean + requantize in one kernel —
+            # the reduced f32 chunk never leaves VMEM.
+            if use_device_prng:
+                noise2 = None
+                seed2 = derive_prng_seed(k2)
+            else:
+                noise2 = jax.random.uniform(k2, (nb_per_chunk, bucket), jnp.float32)
+                seed2 = None
+            ridx, rnorms = dequant_reduce_requantize_blocks(
+                p_t, n_t, levels, noise2,
+                num_symbols=cfg.num_symbols, num_workers=axis_size,
+                q_is_inf=math.isinf(cfg.q_norm), bits=cfg.bits,
+                use_device_prng=use_device_prng, seed=seed2, interpret=interpret,
+            )
+        else:
+            deq = _dequantize_2d(
+                p_t.reshape(axis_size * nb_per_chunk, -1),
+                n_t.reshape(axis_size * nb_per_chunk),
+                levels, cfg, use_pallas, interpret=interpret,
+            ).reshape(axis_size, chunk)
+            reduced = jnp.mean(deq, axis=0)  # this device's chunk of the mean
+            # re-quantize (unbiased) and share the reduced chunk
+            r2d = reduced.reshape(nb_per_chunk, bucket)
+            ridx, rnorms = _quantize_2d(
+                r2d, levels, k2, cfg, use_pallas, interpret=interpret
+            )
+        _record_wire("gather_payload", ridx)
+        _record_wire("gather_norms", rnorms)
+        g_idx = jax.lax.all_gather(ridx, axis_name, tiled=True)
+        g_norms = jax.lax.all_gather(rnorms, axis_name, tiled=True)
+        out = _dequantize_2d(g_idx, g_norms, levels, cfg, use_pallas,
+                             interpret=interpret)
+        return out.reshape(-1)[:n]
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _qgenx_pmean_leafwise(
+    tree,
+    axis_name,
+    levels: Array,
+    key: Array,
+    cfg: Optional[QuantConfig],
+):
+    """Quantized pmean that PRESERVES inner (auto-axis) shardings.
+
+    For use inside ``shard_map(..., axis_names={axis_name})`` where the
+    other mesh axes stay under GSPMD: the flat-concat path reshapes every
+    leaf, which forces XLA to re-gather the inner-sharded gradients.  Here
+    each leaf is quantized *in place* — per-row L^q norms over the last dim
+    (the "bucket" is the trailing dimension), elementwise stochastic
+    rounding, int8 payload of identical shape — so only the ``all_gather``
+    over the manual axis moves data, and it moves int8 (packed int4 when
+    the trailing dim is even).
+
+    Semantically still Definition 1 (unbiased, normalized quantization);
+    the bucket size is the leaf's trailing dim instead of a fixed 1024 —
+    Theorem 1 holds with d = trailing dim.
+    """
+    if cfg is None:
+        return jax.lax.pmean(tree, axis_name)
+    from repro.core.quantization import _stochastic_round_indices
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(_axis_key(key, axis_name), len(leaves))
+    out = []
+    lv = levels.astype(jnp.float32)
+    for g, k in zip(leaves, keys):
+        gf = g.astype(jnp.float32)
+        if math.isinf(cfg.q_norm):
+            norms = jnp.max(jnp.abs(gf), axis=-1, keepdims=True)
+        else:
+            norms = jnp.sqrt(jnp.sum(gf * gf, axis=-1, keepdims=True))
+        safe = jnp.where(norms > 0, norms, 1.0)
+        u = jnp.clip(jnp.abs(gf) / safe, 0.0, 1.0)
+        idx = _stochastic_round_indices(u, lv, k, cfg.stochastic)
+        signed = jnp.where(gf < 0, -idx, idx)
+        # the only cross-device traffic: int8/int4 payload + f32 row norms
+        # (packing reuses the kernels' wire-format helpers — one layout)
+        d = g.shape[-1]
+        pack4 = cfg.bits == 4 and d % 2 == 0
+        if pack4:
+            payload = pack4_rows(signed.reshape(-1, d)).reshape(
+                g.shape[:-1] + (d // 2,)
+            )
+        else:
+            payload = signed.astype(jnp.int8)
+        _record_wire("leaf_payload", payload)
+        _record_wire("leaf_norms", norms)
+        all_p = jax.lax.all_gather(payload, axis_name)  # [K, ...]
+        all_norms = jax.lax.all_gather(norms, axis_name)
+        if pack4:
+            all_idx = unpack4_rows(all_p.reshape(-1, d // 2)).reshape(
+                all_p.shape[:-1] + (d,)
+            )
+        else:
+            all_idx = all_p.astype(jnp.int32)
+        mag = jnp.abs(all_idx)
+        vals = lv[mag] * jnp.sign(all_idx.astype(jnp.float32)) * all_norms
+        out.append(jnp.mean(vals, axis=0).astype(g.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Config + state
+# ---------------------------------------------------------------------------
+
+_DEFAULT_QUANT_LO = QuantConfig(num_levels=5, bits=4, bucket_size=512)
+_DEFAULT_QUANT_HI = QuantConfig(num_levels=15, bits=8, bucket_size=512)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeConfig:
+    """Everything the exchange needs, in one frozen (hashable) bundle.
+
+    Attributes:
+      compressor: registry name — "none" | "qgenx" | "randk" | "layerwise".
+      quant: the quantizer config (qgenx: the config; layerwise: the
+        aggressive config for LARGE leaves; ignored by none/randk).
+      quant_small: layerwise only — conservative config for small leaves.
+      mode: "gather" | "two_phase" | "leafwise" (tree exchanges; flat
+        ``pmean`` accepts gather/two_phase).
+      axis_name: the shard_map axis the exchange reduces over.
+      use_pallas / use_device_prng / interpret: kernel routing flags
+        (previously dropped on the floor between the train step and the
+        exchange — now carried here so every consumer forwards them).
+      level_schedule: "fixed" | "qada" — QAda (Section 3.3) accumulates
+        the weighted coordinate histogram in ExchangeState.hist (psum-merged
+        across workers) and refreshes ExchangeState.levels every
+        ``level_update_every`` pmean calls.
+      rand_frac: randk — fraction of coordinates each worker keeps.
+      layerwise_threshold: leaves with more elements than this take the
+        low-bit ``quant`` config; the rest take ``quant_small``.
+    """
+
+    compressor: str = "qgenx"
+    quant: Optional[QuantConfig] = None
+    quant_small: QuantConfig = _DEFAULT_QUANT_HI
+    mode: str = "two_phase"
+    axis_name: str = "data"
+    use_pallas: bool = False
+    use_device_prng: bool = False
+    interpret: bool = True
+    level_schedule: str = "fixed"
+    level_update_every: int = 0
+    qada_bins: int = 512
+    qada_sweeps: int = 2
+    qada_bisect_iters: int = 20
+    rand_frac: float = 0.25
+    layerwise_threshold: int = 65536
+
+    def __post_init__(self):
+        if self.mode not in ("gather", "two_phase", "leafwise"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.level_schedule not in ("fixed", "qada"):
+            raise ValueError(f"unknown level_schedule {self.level_schedule!r}")
+        if self.level_schedule == "qada" and self.level_update_every <= 0:
+            raise ValueError("level_schedule='qada' needs level_update_every > 0")
+        if not (0.0 < self.rand_frac <= 1.0):
+            raise ValueError(f"rand_frac must be in (0, 1], got {self.rand_frac}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ExchangeState:
+    """Explicit exchange state, threaded through the train step as a pytree.
+
+    levels: current level table of the primary quantizer (qgenx, and the
+      layerwise small-leaf group); a [2] placeholder for none/randk.
+    levels_lo: layerwise large-leaf (low-bit) table; [2] placeholder
+      elsewhere.
+    hist: QAda sufficient statistics accumulated since the last refresh
+      ([qada_bins] under the qada schedule, [1] placeholder otherwise).
+    step: number of pmean calls performed with this state.
+    """
+
+    levels: Array
+    levels_lo: Array
+    hist: Array
+    step: Array
+
+    def tree_flatten(self):
+        return (self.levels, self.levels_lo, self.hist, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def null_exchange_state() -> ExchangeState:
+    """Placeholder state for steps built without an exchange (uniform
+    signature: callers always thread an ExchangeState)."""
+    lv = jnp.asarray([0.0, 1.0], jnp.float32)
+    return ExchangeState(
+        levels=lv, levels_lo=lv,
+        hist=jnp.zeros((1,), jnp.float32), step=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Compressor registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register_compressor(cls):
+    """Class decorator: add a Compressor implementation to the registry."""
+    inst = cls()
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_compressor(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_compressors() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+class Compressor:
+    """One unbiased-compression policy (the contract: E[compress(v)] = v).
+
+    ``pmean`` runs inside shard_map and may use collectives; ``compress``
+    is the collective-free per-worker point estimate hat{v} = DEQ(Q(v))
+    used by the simulated-worker paths (Q-GenX loop, WGAN testbed) and by
+    the unbiasedness contract test.
+    """
+
+    name = "?"
+    has_levels = False
+
+    def validate(self, cfg: ExchangeConfig) -> None:
+        """Reject config combinations this compressor cannot honor (called
+        by make_exchange and before any leafwise dispatch)."""
+        if cfg.mode == "leafwise" and self.name not in ("qgenx", "none"):
+            raise ValueError(
+                f"compressor {self.name!r} has no sharding-preserving "
+                "leafwise path; use mode='gather' or 'two_phase'"
+            )
+
+    def init_levels(self, cfg: ExchangeConfig):
+        lv = jnp.asarray([0.0, 1.0], jnp.float32)
+        return lv, lv
+
+    def pmean(self, x, cfg: ExchangeConfig, state: ExchangeState, key):
+        raise NotImplementedError
+
+    def pmean_tree(self, tree, cfg: ExchangeConfig, state: ExchangeState, key):
+        """Default: bucket-fuse all leaves into one flat vector."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+        out = self.pmean(flat, cfg, state, key)
+        return jax.tree_util.tree_unflatten(treedef, _split_like(out, leaves))
+
+    def compress(self, v, cfg: ExchangeConfig, levels, key):
+        raise NotImplementedError
+
+    def compress_tree(self, tree, cfg: ExchangeConfig, levels, key):
+        """Per-worker unbiased compression of a pytree, leaf-wise."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = [
+            self.compress(l.reshape(-1), cfg, levels, k)
+            .reshape(l.shape).astype(l.dtype)
+            for l, k in zip(leaves, keys)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def refresh_tables(self, levels, levels_lo, hist, cfg: ExchangeConfig):
+        """QAda refresh of this compressor's level tables from merged
+        sufficient statistics (default: primary table only)."""
+        new = qada.optimize_levels(
+            levels, hist,
+            sweeps=cfg.qada_sweeps, bisect_iters=cfg.qada_bisect_iters,
+        )
+        return new, levels_lo
+
+    def wire_bytes(self, n: int, axis_size: int, cfg: ExchangeConfig) -> float:
+        """Collective-operand bytes per device per pmean call (the exact
+        sizes the trace recorder sees)."""
+        raise NotImplementedError
+
+    def wire_bytes_tree(self, shapes, axis_size: int, cfg: ExchangeConfig) -> float:
+        return self.wire_bytes(sum(_size_of(s) for s in shapes), axis_size, cfg)
+
+    def compress_wire_bytes(self, n: int, cfg: ExchangeConfig) -> float:
+        """Bytes one worker broadcasts for one compressed n-vector (the
+        Algorithm 1 / Q-GenX per-iteration accounting)."""
+        raise NotImplementedError
+
+    def compress_wire_bytes_tree(self, shapes, cfg: ExchangeConfig) -> float:
+        """Broadcast bytes for one compressed pytree — per leaf, matching
+        what :meth:`compress_tree` actually emits (per-leaf padding and
+        per-leaf minimum supports are real bytes)."""
+        return float(sum(
+            self.compress_wire_bytes(_size_of(s), cfg) for s in shapes
+        ))
+
+
+def _size_of(s) -> int:
+    size = 1
+    for d in (s.shape if hasattr(s, "shape") else s):
+        size *= d
+    return size
+
+
+def _split_like(flat: Array, leaves):
+    outs, off = [], 0
+    for l in leaves:
+        outs.append(flat[off: off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return outs
+
+
+@register_compressor
+class NoneCompressor(Compressor):
+    """Exact FP32 pmean — the shard_map-routed control arm."""
+
+    name = "none"
+
+    def pmean(self, x, cfg, state, key):
+        return jax.lax.pmean(x, cfg.axis_name)
+
+    def pmean_tree(self, tree, cfg, state, key):
+        return jax.lax.pmean(tree, cfg.axis_name)
+
+    def compress(self, v, cfg, levels, key):
+        return v
+
+    def compress_tree(self, tree, cfg, levels, key):
+        return tree
+
+    def wire_bytes(self, n, axis_size, cfg):
+        # XLA's ring all-reduce; NOT visible to the trace recorder (no
+        # explicit buffer is handed to a collective by this module).
+        return 2 * (axis_size - 1) / axis_size * 4.0 * n
+
+    def compress_wire_bytes(self, n, cfg):
+        return 4.0 * n
+
+
+@register_compressor
+class QgenxCompressor(Compressor):
+    """The paper's bucketed stochastic quantization (Definition 1),
+    bit-exact with the legacy ``compressed_pmean`` path."""
+
+    name = "qgenx"
+    has_levels = True
+
+    def _quant(self, cfg: ExchangeConfig) -> QuantConfig:
+        if cfg.quant is None:
+            raise ValueError("compressor='qgenx' requires ExchangeConfig.quant")
+        return cfg.quant
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        self._quant(cfg)
+
+    def init_levels(self, cfg):
+        lv = uniform_levels(self._quant(cfg).num_levels)
+        return lv, lv
+
+    def pmean(self, x, cfg, state, key):
+        if cfg.mode == "leafwise":
+            raise ValueError("mode='leafwise' is a tree exchange; use pmean_tree")
+        return _qgenx_pmean(
+            x, cfg.axis_name, state.levels, key, self._quant(cfg), cfg.mode,
+            cfg.use_pallas, cfg.use_device_prng, cfg.interpret,
+        )
+
+    def pmean_tree(self, tree, cfg, state, key):
+        if cfg.mode == "leafwise":
+            return _qgenx_pmean_leafwise(
+                tree, cfg.axis_name, state.levels, key, self._quant(cfg)
+            )
+        return super().pmean_tree(tree, cfg, state, key)
+
+    def compress(self, v, cfg, levels, key):
+        return quantize_dequantize(v, levels, key, self._quant(cfg)).reshape(v.shape)
+
+    def compress_tree(self, tree, cfg, levels, key):
+        q = self._quant(cfg)
+        lv = levels if levels is not None else uniform_levels(q.num_levels)
+        return quantize_dequantize_pytree(tree, lv, key, q)
+
+    def wire_bytes(self, n, axis_size, cfg):
+        if cfg.mode == "leafwise":
+            sizes = leafwise_buffer_bytes((n,), self._quant(cfg))
+        else:
+            sizes = exchange_buffer_bytes(n, axis_size, self._quant(cfg), cfg.mode)
+        return float(sum(sizes.values()))
+
+    def wire_bytes_tree(self, shapes, axis_size, cfg):
+        if cfg.mode == "leafwise":
+            return float(sum(
+                sum(leafwise_buffer_bytes(
+                    s.shape if hasattr(s, "shape") else s, self._quant(cfg)
+                ).values())
+                for s in shapes
+            ))
+        return super().wire_bytes_tree(shapes, axis_size, cfg)
+
+    def compress_wire_bytes(self, n, cfg):
+        return float(self._quant(cfg).payload_bytes(n))
+
+
+def _randk_k(n: int, cfg: ExchangeConfig) -> int:
+    return max(1, int(round(cfg.rand_frac * n)))
+
+
+@register_compressor
+class RandKCompressor(Compressor):
+    """Unbiased rand-K sparsification: keep k = rand_frac * n coordinates
+    chosen uniformly without replacement, scaled by n/k so
+    E[compress(v)] = v.  Wire format: k f32 values + k int32 indices per
+    worker, all-gathered (broadcast semantics, like the paper's CODE o Q)."""
+
+    name = "randk"
+
+    def _support(self, n, k, key):
+        return jax.random.permutation(key, n)[:k]
+
+    def pmean(self, x, cfg, state, key):
+        n = x.shape[0]
+        k = _randk_k(n, cfg)
+        key = _axis_key(key, cfg.axis_name)
+        axis_size = jax.lax.psum(1, cfg.axis_name)
+        idx = self._support(n, k, key).astype(jnp.int32)
+        vals = x[idx] * (n / k)
+        _record_wire("randk_vals", vals)
+        _record_wire("randk_idx", idx)
+        all_vals = jax.lax.all_gather(vals, cfg.axis_name)  # [K, k] f32
+        all_idx = jax.lax.all_gather(idx, cfg.axis_name)  # [K, k] i32
+        out = jnp.zeros((n,), jnp.float32).at[all_idx.reshape(-1)].add(
+            all_vals.reshape(-1)
+        )
+        return out / axis_size
+
+    def compress(self, v, cfg, levels, key):
+        n = v.shape[0]
+        k = _randk_k(n, cfg)
+        idx = self._support(n, k, key)
+        return jnp.zeros((n,), v.dtype).at[idx].set(v[idx] * (n / k))
+
+    def wire_bytes(self, n, axis_size, cfg):
+        return 8.0 * _randk_k(n, cfg)  # 4 B value + 4 B index
+
+    def compress_wire_bytes(self, n, cfg):
+        return 8.0 * _randk_k(n, cfg)
+
+
+@register_compressor
+class LayerwiseCompressor(Compressor):
+    """Per-leaf bit-width policy (layer-wise quantization): leaves larger
+    than ``layerwise_threshold`` take the aggressive low-bit ``quant``
+    config (default packed int4), the rest the conservative 8-bit
+    ``quant_small`` — each group bucket-fused through the qgenx exchange
+    with its own level table.  Still unbiased: every group is Definition 1
+    quantization."""
+
+    name = "layerwise"
+    has_levels = True
+
+    def _cfgs(self, cfg: ExchangeConfig):
+        lo = cfg.quant if cfg.quant is not None else _DEFAULT_QUANT_LO
+        return lo, cfg.quant_small
+
+    def init_levels(self, cfg):
+        lo, hi = self._cfgs(cfg)
+        return uniform_levels(hi.num_levels), uniform_levels(lo.num_levels)
+
+    def _group(self, leaves, cfg):
+        big = [i for i, l in enumerate(leaves) if l.size > cfg.layerwise_threshold]
+        small = [i for i, l in enumerate(leaves) if l.size <= cfg.layerwise_threshold]
+        return big, small
+
+    def pmean(self, x, cfg, state, key):
+        self.validate(cfg)
+        lo, hi = self._cfgs(cfg)
+        big = x.shape[0] > cfg.layerwise_threshold
+        qcfg = lo if big else hi
+        levels = state.levels_lo if big else state.levels
+        return _qgenx_pmean(
+            x, cfg.axis_name, levels, key, qcfg, cfg.mode,
+            cfg.use_pallas, cfg.use_device_prng, cfg.interpret,
+        )
+
+    def pmean_tree(self, tree, cfg, state, key):
+        self.validate(cfg)
+        lo, hi = self._cfgs(cfg)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        big, small = self._group(leaves, cfg)
+        mode = cfg.mode
+        out = [None] * len(leaves)
+        for gid, (idxs, qcfg, levels) in enumerate(
+            ((big, lo, state.levels_lo), (small, hi, state.levels))
+        ):
+            if not idxs:
+                continue
+            group = [leaves[i] for i in idxs]
+            flat = jnp.concatenate(
+                [l.reshape(-1).astype(jnp.float32) for l in group]
+            )
+            mean = _qgenx_pmean(
+                flat, cfg.axis_name, levels, jax.random.fold_in(key, gid),
+                qcfg, mode, cfg.use_pallas, cfg.use_device_prng, cfg.interpret,
+            )
+            for i, o in zip(idxs, _split_like(mean, group)):
+                out[i] = o
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def compress(self, v, cfg, levels, key):
+        lo, hi = self._cfgs(cfg)
+        qcfg = lo if v.size > cfg.layerwise_threshold else hi
+        # use the caller's (possibly QAda-refreshed) table when it belongs
+        # to this size class; fall back to uniform otherwise
+        if levels is None or levels.shape[0] != qcfg.num_symbols:
+            levels = uniform_levels(qcfg.num_levels)
+        return quantize_dequantize(v, levels, key, qcfg).reshape(v.shape)
+
+    def wire_bytes(self, n, axis_size, cfg):
+        self.validate(cfg)
+        lo, hi = self._cfgs(cfg)
+        qcfg = lo if n > cfg.layerwise_threshold else hi
+        return float(sum(
+            exchange_buffer_bytes(n, axis_size, qcfg, cfg.mode).values()
+        ))
+
+    def wire_bytes_tree(self, shapes, axis_size, cfg):
+        self.validate(cfg)
+        lo, hi = self._cfgs(cfg)
+        sizes = [_size_of(s) for s in shapes]
+        mode = cfg.mode
+        total = 0.0
+        for qcfg, group in (
+            (lo, [s for s in sizes if s > cfg.layerwise_threshold]),
+            (hi, [s for s in sizes if s <= cfg.layerwise_threshold]),
+        ):
+            if group:
+                total += sum(
+                    exchange_buffer_bytes(sum(group), axis_size, qcfg, mode).values()
+                )
+        return float(total)
+
+    def compress_wire_bytes(self, n, cfg):
+        lo, hi = self._cfgs(cfg)
+        qcfg = lo if n > cfg.layerwise_threshold else hi
+        return float(qcfg.payload_bytes(n))
+
+    def refresh_tables(self, levels, levels_lo, hist, cfg):
+        # both tables adapt from the same (table-independent) histogram
+        new = qada.optimize_levels(
+            levels, hist,
+            sweeps=cfg.qada_sweeps, bisect_iters=cfg.qada_bisect_iters,
+        )
+        new_lo = qada.optimize_levels(
+            levels_lo, hist,
+            sweeps=cfg.qada_sweeps, bisect_iters=cfg.qada_bisect_iters,
+        )
+        return new, new_lo
+
+
+# ---------------------------------------------------------------------------
+# The Exchange object
+# ---------------------------------------------------------------------------
+
+
+class Exchange:
+    """A configured exchange: compressor + state management + accounting.
+
+    All ``pmean*`` methods must run inside shard_map with
+    ``cfg.axis_name`` in scope; they return ``(mean, new_state)`` so the
+    caller threads :class:`ExchangeState` explicitly (that is what makes
+    QAda level schedules reachable from jitted training steps)."""
+
+    def __init__(self, cfg: ExchangeConfig):
+        self.cfg = cfg
+        self.compressor = get_compressor(cfg.compressor)
+
+    # -- state ---------------------------------------------------------
+
+    def init_state(self) -> ExchangeState:
+        levels, levels_lo = self.compressor.init_levels(self.cfg)
+        bins = self.cfg.qada_bins if self.cfg.level_schedule == "qada" else 1
+        return ExchangeState(
+            levels=levels, levels_lo=levels_lo,
+            hist=jnp.zeros((bins,), jnp.float32),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def _qada_active(self) -> bool:
+        return (
+            self.cfg.level_schedule == "qada" and self.compressor.has_levels
+        )
+
+    def _hist_quant(self) -> QuantConfig:
+        return self.cfg.quant if self.cfg.quant is not None else _DEFAULT_QUANT_LO
+
+    def _flat_hist(self, x_flat) -> Array:
+        q = self._hist_quant()
+        v2d, _ = _pad_to_buckets(
+            x_flat.reshape(-1).astype(jnp.float32), q.bucket_size
+        )
+        return qada.normalized_coord_histogram(
+            v2d, bucket_norms(v2d, q.q_norm), bins=self.cfg.qada_bins
+        )
+
+    def _tree_hist(self, tree) -> Array:
+        """Sufficient statistics of a pytree, leaf-by-leaf — no full-size
+        flat concatenation (the only O(n) pass is the histogram reads)."""
+        hist = jnp.zeros((self.cfg.qada_bins,), jnp.float32)
+        for g in jax.tree_util.tree_leaves(tree):
+            hist = hist + self._flat_hist(g.reshape(-1))
+        return hist
+
+    def _leafwise_hist(self, tree) -> Array:
+        # per-leaf rows over the trailing dim (the leafwise "bucket"), no
+        # flat concat — keeps the sharding-preserving property
+        q = self._hist_quant()
+        hist = jnp.zeros((self.cfg.qada_bins,), jnp.float32)
+        for g in jax.tree_util.tree_leaves(tree):
+            v2d = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+            hist = hist + qada.normalized_coord_histogram(
+                v2d, bucket_norms(v2d, q.q_norm), bins=self.cfg.qada_bins
+            )
+        return hist
+
+    def _advance(self, state: ExchangeState, local_hist=None) -> ExchangeState:
+        """Bump the call counter; with QAda stats, merge + maybe refresh.
+
+        The histogram (weighted distribution of normalized coordinates) is
+        table-independent, so one merged histogram refreshes every level
+        table the compressor carries (both layerwise tables).  The
+        coordinate-descent solve runs under ``lax.cond`` — it is only paid
+        on refresh steps, not on every exchange call.
+        """
+        cfg = self.cfg
+        if local_hist is None:
+            return dataclasses.replace(state, step=state.step + 1)
+        # merge sufficient statistics across workers so the state stays
+        # replicated over the exchange axis (QAda line 4 of Algorithm 1);
+        # the histogram is a real collective operand — record it so the
+        # wire metric stays honest under the qada schedule
+        _record_wire("qada_hist", local_hist)
+        hist = state.hist + jax.lax.psum(local_hist, cfg.axis_name)
+        every = cfg.level_update_every
+        refresh = (state.step % every) == (every - 1)
+
+        def do_refresh(args):
+            levels, levels_lo, h = args
+            new, new_lo = self.compressor.refresh_tables(
+                levels, levels_lo, h, cfg
+            )
+            return new, new_lo, jnp.zeros_like(h)
+
+        levels, levels_lo, hist = jax.lax.cond(
+            refresh, do_refresh, lambda args: args,
+            (state.levels, state.levels_lo, hist),
+        )
+        return ExchangeState(
+            levels=levels, levels_lo=levels_lo,
+            hist=hist, step=state.step + 1,
+        )
+
+    # -- exchanges -----------------------------------------------------
+
+    def pmean(self, x: Array, state: ExchangeState, key: Array):
+        """Unbiased mean of a flat vector over the exchange axis."""
+        mean = self.compressor.pmean(x, self.cfg, state, key)
+        hist = self._flat_hist(x) if self._qada_active() else None
+        return mean, self._advance(state, hist)
+
+    def pmean_tree(self, tree, state: ExchangeState, key: Array):
+        """Unbiased mean of a gradient pytree (bucket-fused / per policy)."""
+        if self.cfg.mode == "leafwise":
+            return self.pmean_leafwise(tree, state, key)
+        mean = self.compressor.pmean_tree(tree, self.cfg, state, key)
+        hist = self._tree_hist(tree) if self._qada_active() else None
+        return mean, self._advance(state, hist)
+
+    def pmean_leafwise(self, tree, state: ExchangeState, key: Array):
+        """Sharding-preserving per-leaf exchange (production mesh)."""
+        cfg = dataclasses.replace(self.cfg, mode="leafwise")
+        self.compressor.validate(cfg)  # loud, not a silent flat fallback
+        mean = self.compressor.pmean_tree(tree, cfg, state, key)
+        hist = self._leafwise_hist(tree) if self._qada_active() else None
+        return mean, self._advance(state, hist)
+
+    # -- collective-free per-worker compression ------------------------
+
+    def compress(self, v: Array, state: ExchangeState, key: Array) -> Array:
+        """Per-worker unbiased point estimate hat{v} (no collectives)."""
+        return self.compressor.compress(v, self.cfg, state.levels, key)
+
+    def compress_with_levels(self, v: Array, levels: Array, key: Array) -> Array:
+        """Like :meth:`compress` with an externally-carried level table
+        (the Q-GenX loop keeps levels in QGenXState)."""
+        return self.compressor.compress(v, self.cfg, levels, key)
+
+    def compress_tree(self, tree, key: Array, levels: Optional[Array] = None):
+        """Per-worker unbiased compression of a pytree, leaf-wise."""
+        return self.compressor.compress_tree(tree, self.cfg, levels, key)
+
+    # -- QAda (externally-carried levels, Q-GenX loop) ------------------
+
+    def qada_propose(self, levels: Array, v: Array) -> Array:
+        """One QAda refresh proposal from fresh dual vectors ``v`` (any
+        shape whose trailing dim is the coordinate dim)."""
+        q = self.cfg.quant if self.cfg.quant is not None else _DEFAULT_QUANT_LO
+        b = min(q.bucket_size, v.shape[-1])
+        v2d = v.reshape(-1, b)
+        hist = qada.normalized_coord_histogram(
+            v2d, bucket_norms(v2d, q.q_norm), bins=self.cfg.qada_bins
+        )
+        return qada.optimize_levels(
+            levels, hist,
+            sweeps=self.cfg.qada_sweeps, bisect_iters=self.cfg.qada_bisect_iters,
+        )
+
+    # -- accounting ----------------------------------------------------
+
+    def _qada_wire_bytes(self) -> float:
+        """The qada schedule psums the [qada_bins] f32 histogram once per
+        pmean call — real collective traffic, counted like any operand."""
+        return 4.0 * self.cfg.qada_bins if self._qada_active() else 0.0
+
+    def wire_bytes(self, n: int, axis_size: int) -> float:
+        """Analytic collective-operand bytes per device for ONE flat pmean
+        of n coordinates — equals the sum of the trace recorder's entries
+        (for compressors that hand explicit buffers to collectives)."""
+        return (self.compressor.wire_bytes(n, axis_size, self.cfg)
+                + self._qada_wire_bytes())
+
+    def wire_bytes_tree(self, tree, axis_size: int) -> float:
+        """Same, for one pmean_tree of this pytree (leaf shapes may matter:
+        leafwise mode and the layerwise policy account per leaf/group)."""
+        shapes = [l for l in jax.tree_util.tree_leaves(tree)]
+        return (self.compressor.wire_bytes_tree(shapes, axis_size, self.cfg)
+                + self._qada_wire_bytes())
+
+    def compress_wire_bytes(self, n: int) -> float:
+        """Bytes one worker broadcasts for one compressed n-vector."""
+        return self.compressor.compress_wire_bytes(n, self.cfg)
+
+    def compress_wire_bytes_tree(self, tree) -> float:
+        """Broadcast bytes for one compressed pytree (per-leaf policies
+        accounted leaf-by-leaf, matching :meth:`compress_tree`)."""
+        shapes = list(jax.tree_util.tree_leaves(tree))
+        return self.compressor.compress_wire_bytes_tree(shapes, self.cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def make_exchange(cfg: ExchangeConfig) -> Exchange:
+    """Build (and cache — ExchangeConfig is frozen/hashable) an Exchange."""
+    ex = Exchange(cfg)
+    ex.compressor.validate(cfg)
+    return ex

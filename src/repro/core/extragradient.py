@@ -38,11 +38,9 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import adaptive_levels as qada
+from repro.core.exchange import Exchange, ExchangeConfig, make_exchange
 from repro.core.quantization import (
     QuantConfig,
-    bucket_norms,
-    quantize_dequantize,
     uniform_levels,
 )
 
@@ -53,13 +51,29 @@ Array = jax.Array
 class QGenXConfig:
     variant: str = "de"  # "da" | "de" | "optda"
     num_workers: int = 4  # K
-    quant: Optional[QuantConfig] = None  # None = full precision
+    quant: Optional[QuantConfig] = None  # shorthand for a qgenx exchange
+    exchange: Optional[ExchangeConfig] = None  # full exchange spec (any compressor)
     level_update_every: int = 0  # 0 = never (fixed levels); else QAda period
     gamma_scale: float = 1.0  # optional scale on the adaptive step-size
 
     def __post_init__(self):
         if self.variant not in ("da", "de", "optda"):
             raise ValueError(f"unknown variant {self.variant}")
+
+    def make_exchange(self) -> Optional[Exchange]:
+        """The Exchange this config compresses with (None = full precision).
+
+        ``quant=...`` is shorthand for the paper's qgenx compressor; a full
+        ``exchange=ExchangeConfig(...)`` opens the whole registry (randk,
+        layerwise, ...) to the Q-GenX loop.
+        """
+        if self.exchange is not None:
+            return make_exchange(self.exchange)
+        if self.quant is not None:
+            return make_exchange(
+                ExchangeConfig(compressor="qgenx", quant=self.quant)
+            )
+        return None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -85,16 +99,22 @@ class QGenXState:
         return cls(*ch)
 
 
+def _init_levels(cfg: QGenXConfig) -> Array:
+    ex = cfg.make_exchange()
+    if ex is None or not ex.compressor.has_levels:
+        return uniform_levels(1)
+    return ex.init_state().levels
+
+
 def qgenx_init(x0: Array, cfg: QGenXConfig) -> QGenXState:
     d = x0.shape[0]
-    s = cfg.quant.num_levels if cfg.quant else 1
     gamma1 = cfg.gamma_scale * cfg.num_workers  # gamma at t=1 (sum_sq = 0)
     return QGenXState(
         x=x0.astype(jnp.float32),
         y=x0.astype(jnp.float32) / gamma1,  # Y_1 s.t. X_1 = gamma_1 Y_1
         sum_sq=jnp.zeros((), jnp.float32),
         prev_half=jnp.zeros((cfg.num_workers, d), jnp.float32),
-        levels=uniform_levels(s),
+        levels=_init_levels(cfg),
         x_avg=jnp.zeros_like(x0, dtype=jnp.float32),
         t=jnp.zeros((), jnp.int32),
         bits_sent=jnp.zeros((), jnp.float32),
@@ -105,18 +125,20 @@ def _gamma(sum_sq: Array, K: int, scale: float) -> Array:
     return scale * K * jax.lax.rsqrt(1.0 + sum_sq)
 
 
-def _maybe_quantize(v: Array, levels: Array, key: Array, cfg: QGenXConfig) -> Array:
+def _maybe_quantize(
+    v: Array, levels: Array, key: Array, ex: Optional[Exchange]
+) -> Array:
     """Per-worker unbiased compression Vhat = DEQ(CODE(Q(V))); identity if off."""
-    if cfg.quant is None:
+    if ex is None:
         return v
-    return quantize_dequantize(v, levels, key, cfg.quant).reshape(v.shape)
+    return ex.compress_with_levels(v, levels, key).reshape(v.shape)
 
 
-def _per_iter_bits(d: int, cfg: QGenXConfig) -> float:
+def _per_iter_bits(d: int, ex: Optional[Exchange]) -> float:
     """Fixed-width wire bits per worker per oracle exchange."""
-    if cfg.quant is None:
+    if ex is None:
         return 32.0 * d
-    return 8.0 * cfg.quant.payload_bytes(d)
+    return 8.0 * ex.compress_wire_bytes(d)
 
 
 def qgenx_step(
@@ -132,6 +154,7 @@ def qgenx_step(
     """
     K = cfg.num_workers
     d = state.x.shape[0]
+    ex = cfg.make_exchange()  # same Exchange seam as the train step
     k_q1, k_q2, k_o1, k_o2, k_lv = jax.random.split(key, 5)
 
     gamma_t = _gamma(state.sum_sq, K, cfg.gamma_scale)
@@ -145,7 +168,7 @@ def qgenx_step(
         keys_o = jax.random.split(k_o1, K)
         v_t = jax.vmap(lambda k: oracle(state.x, k))(keys_o)
         keys_q = jax.random.split(k_q1, K)
-        v_hat_t = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, cfg))(
+        v_hat_t = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, ex))(
             v_t, keys_q
         )
     else:  # optda: reuse last half-step feedback (already quantized then)
@@ -158,7 +181,7 @@ def qgenx_step(
     keys_o2 = jax.random.split(k_o2, K)
     v_half = jax.vmap(lambda k: oracle(x_half, k))(keys_o2)
     keys_q2 = jax.random.split(k_q2, K)
-    v_hat_half = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, cfg))(
+    v_hat_half = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, ex))(
         v_half, keys_q2
     )
     n_exchanges += 1
@@ -172,12 +195,8 @@ def qgenx_step(
 
     # ---- QAda level refresh (sufficient statistics of fresh duals) ------
     levels = state.levels
-    if cfg.quant is not None and cfg.level_update_every > 0:
-        v2d = v_hat_half.reshape(-1, min(cfg.quant.bucket_size, d))
-        hist = qada.normalized_coord_histogram(
-            v2d, bucket_norms(v2d, cfg.quant.q_norm), bins=512
-        )
-        new_levels = qada.optimize_levels(levels, hist, sweeps=2, bisect_iters=20)
+    if ex is not None and ex.compressor.has_levels and cfg.level_update_every > 0:
+        new_levels = ex.qada_propose(levels, v_hat_half)
         refresh = (state.t % cfg.level_update_every) == (cfg.level_update_every - 1)
         levels = jnp.where(refresh, new_levels, levels)
 
@@ -192,7 +211,7 @@ def qgenx_step(
         levels=levels,
         x_avg=x_avg,
         t=t_next,
-        bits_sent=state.bits_sent + n_exchanges * _per_iter_bits(d, cfg),
+        bits_sent=state.bits_sent + n_exchanges * _per_iter_bits(d, ex),
     )
 
 
@@ -236,18 +255,21 @@ def qsgda_run(
     bilinear problems while Q-GenX makes steady progress.
     """
     levels = uniform_levels(quant.num_levels if quant else 1)
+    ex = (
+        make_exchange(ExchangeConfig(compressor="qgenx", quant=quant))
+        if quant is not None
+        else None
+    )
 
     def body(carry, k):
         x, x_avg, t = carry
         ko, kq = jax.random.split(k)
         keys_o = jax.random.split(ko, num_workers)
         v = jax.vmap(lambda kk: oracle(x, kk))(keys_o)
-        if quant is not None:
+        if ex is not None:
             keys_q = jax.random.split(kq, num_workers)
             v = jax.vmap(
-                lambda vv, kk: quantize_dequantize(vv, levels, kk, quant).reshape(
-                    vv.shape
-                )
+                lambda vv, kk: _maybe_quantize(vv, levels, kk, ex)
             )(v, keys_q)
         x = x - lr * jnp.mean(v, axis=0)
         t = t + 1

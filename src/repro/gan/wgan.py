@@ -22,11 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantization import (
-    QuantConfig,
-    quantize_dequantize_pytree,
-    uniform_levels,
-)
+from repro.core.exchange import Exchange, ExchangeConfig, make_exchange
+from repro.core.quantization import QuantConfig
 from repro.optim import optimizers as opt
 
 Array = jax.Array
@@ -40,7 +37,17 @@ class GANConfig:
     lr: float = 1e-3
     num_workers: int = 3  # paper: 3 nodes
     batch_per_worker: int = 256
-    quant: Optional[QuantConfig] = None
+    quant: Optional[QuantConfig] = None  # shorthand for a qgenx exchange
+    exchange: Optional[ExchangeConfig] = None  # full exchange spec
+
+    def make_exchange(self) -> Optional[Exchange]:
+        if self.exchange is not None:
+            return make_exchange(self.exchange)
+        if self.quant is not None:
+            return make_exchange(
+                ExchangeConfig(compressor="qgenx", quant=self.quant)
+            )
+        return None
 
 
 def _mlp_init(key, sizes):
@@ -119,18 +126,18 @@ def _game_grads(params, real, key, cfg: GANConfig):
 
 def make_step(cfg: GANConfig, opt_cfg: opt.OptimizerConfig):
     """One distributed ExtraAdam step with per-worker compression."""
-    levels = uniform_levels(cfg.quant.num_levels) if cfg.quant else None
+    ex = cfg.make_exchange()  # same Exchange seam as the train step
 
     def worker_grads(params, real_k, key_k):
         return _game_grads(params, real_k, key_k, cfg)
 
     def exchange(grads_k, key):
         # grads_k: pytree with leading worker dim [K, ...]
-        if cfg.quant is None:
+        if ex is None:
             return jax.tree_util.tree_map(lambda g: g.mean(0), grads_k)
 
         def one_worker(g, k):
-            return quantize_dequantize_pytree(g, levels, k, cfg.quant)
+            return ex.compress_tree(g, k)
 
         keys = jax.random.split(key, cfg.num_workers)
         deq = jax.vmap(one_worker)(grads_k, keys)
@@ -165,11 +172,22 @@ def energy_distance(key, params, cfg: GANConfig, n: int = 1024) -> float:
     return float(2 * pdist(real, fake) - pdist(real, real) - pdist(fake, fake))
 
 
-def grad_bytes(params, quant: Optional[QuantConfig]) -> int:
+def grad_bytes(params, ex: Optional[Exchange]) -> float:
+    """Per-worker broadcast bytes of one compressed dual vector.
+
+    The qgenx row models the production wire format — the bucket-fused
+    flat payload ``pmean_tree`` moves (per-leaf quantize_dequantize here
+    is the in-process simulation of the same per-coordinate math, so the
+    fused payload is the honest what-would-cross-the-network number).
+    Policy compressors (randk, layerwise) are accounted per leaf, exactly
+    matching what their ``compress_tree`` emits.
+    """
     n = sum(l.size for l in jax.tree_util.tree_leaves(params))
-    if quant is None:
-        return 4 * n
-    return quant.payload_bytes(n)
+    if ex is None:
+        return 4.0 * n
+    if ex.cfg.compressor == "qgenx":
+        return ex.compress_wire_bytes(n)
+    return ex.compress_wire_bytes_tree(params)
 
 
 def train(
@@ -185,7 +203,7 @@ def train(
     state = opt.init_state(opt_cfg, params)
     step = make_step(cfg, opt_cfg)
 
-    per_exchange = grad_bytes(params, cfg.quant)
+    per_exchange = grad_bytes(params, cfg.make_exchange())
     t_steps = []
     for i in range(steps):
         kd, ks = jax.random.split(jax.random.fold_in(key, i))

@@ -34,6 +34,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig  # noqa: E402
 from repro.configs.registry import ARCHS, get_config  # noqa: E402
+from repro.core.exchange import (  # noqa: E402
+    ExchangeConfig,
+    make_exchange,
+    null_exchange_state,
+)
 from repro.core.quantization import QuantConfig  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
 from repro.launch.mesh import data_axes, make_production_mesh  # noqa: E402
@@ -187,23 +192,30 @@ def lower_combo(
             )
         else:
             quant = None  # qgenx with quant_bits=32: fp32 pod exchange control
-        step = make_train_step(
-            model, opt_cfg,
-            quant=quant,
-            compress_axis="pod" if (mode == "qgenx" and multi_pod) else None,
-            compress_mode="leafwise",
-            mesh=mesh,
+        ex_cfg = None
+        if mode == "qgenx" and multi_pod:
+            # the pure-pmean control (quant=None) still routes through the
+            # shard_map via the "none" compressor
+            ex_cfg = ExchangeConfig(
+                compressor="qgenx" if quant is not None else "none",
+                quant=quant, mode="leafwise", axis_name="pod",
+            )
+        step = make_train_step(model, opt_cfg, exchange=ex_cfg, mesh=mesh)
+        ex = make_exchange(ex_cfg) if ex_cfg is not None else None
+        ex_struct = jax.eval_shape(
+            ex.init_state if ex is not None else null_exchange_state
         )
-        if mode == "qgenx" and quant is None:
-            # pure-pmean control still routes through the shard_map
-            pass
+        ex_sharding = jax.tree_util.tree_map(lambda _: repl, ex_struct)
+        metric_sharding = {"loss": repl, "wire_bytes": repl}
         jitted = jax.jit(
             step,
-            in_shardings=(param_sharding, opt_sharding, batch_sharding, repl),
-            out_shardings=(param_sharding, opt_sharding, {"loss": repl}),
+            in_shardings=(param_sharding, opt_sharding, ex_sharding,
+                          batch_sharding, repl),
+            out_shardings=(param_sharding, opt_sharding, ex_sharding,
+                           metric_sharding),
             donate_argnums=(0, 1),
         )
-        args = (params_shape, opt_shape, batch_struct, key_struct)
+        args = (params_shape, opt_shape, ex_struct, batch_struct, key_struct)
     elif shape.kind == "prefill":
         step = make_prefill_step(model)
         jitted = jax.jit(

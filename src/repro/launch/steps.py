@@ -8,9 +8,22 @@ Distribution model (see DESIGN.md §5):
 * Across pods: params are replicated, the gradient reduction crosses the
   slow inter-pod links — this is where Algorithm 1's quantized exchange is
   applied, via ``shard_map`` over the ``pod`` axis with ``auto`` GSPMD for
-  the inner axes.  ``compress_axis="data"`` gives the paper's original
+  the inner axes.  ``axis_name="data"`` gives the paper's original
   DDP-over-Ethernet setting (params replicated over data; used by the CPU
   examples with 8 host devices).
+
+The exchange is configured through the unified Exchange API
+(:mod:`repro.core.exchange`): ``make_train_step(..., exchange=ExchangeConfig(...))``
+returns a step with the uniform signature
+
+    step(params, opt_state, ex_state, batch, key)
+        -> (params, opt_state, ex_state, metrics)
+
+threading the explicit :class:`ExchangeState` pytree (level tables + QAda
+sufficient statistics) through every call — which is what makes adaptive
+level schedules available in model-scale training.  ``metrics`` carries
+``wire_bytes``: the analytic collective-operand bytes this device moved
+this step (asserted equal to the trace-time wire recorder in tests).
 
 Optimizer = ExtraAdam family (the paper's experimental instantiation);
 both gradient exchanges of the extra-gradient step are compressed, exactly
@@ -19,21 +32,19 @@ like Algorithm 1's two broadcast rounds.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig
-from repro.core.compressed_collectives import (
-    compressed_pmean_leafwise,
-    compressed_pmean_tree,
+from repro.core.exchange import (
+    Exchange,
+    ExchangeConfig,
+    make_exchange,
 )
-from repro.core.quantization import QuantConfig, uniform_levels
+from repro.core.quantization import QuantConfig
 from repro.models.model import Model
 from repro.optim import optimizers as opt
 
@@ -54,81 +65,117 @@ def make_loss_fn(model: Model):
     return loss_fn
 
 
+def _legacy_exchange_config(
+    quant: Optional[QuantConfig],
+    compress_axis: Optional[str],
+    compress_mode: str,
+) -> Optional[ExchangeConfig]:
+    """Map the pre-Exchange keyword bundle onto an ExchangeConfig.
+
+    ``quant=None`` with an axis still routes through shard_map (the exact
+    FP32 control arm the dryrun's qgenx mode uses).
+    """
+    if compress_axis is None:
+        return None
+    return ExchangeConfig(
+        compressor="qgenx" if quant is not None else "none",
+        quant=quant,
+        mode=compress_mode,
+        axis_name=compress_axis,
+    )
+
+
 def make_train_step(
     model: Model,
     opt_cfg: opt.OptimizerConfig,
     *,
-    quant: Optional[QuantConfig] = None,
-    compress_axis: Optional[str] = None,  # "pod" | "data" | None
-    compress_mode: str = "two_phase",
+    exchange: Union[ExchangeConfig, Exchange, None] = None,
+    quant: Optional[QuantConfig] = None,  # deprecated: use exchange=
+    compress_axis: Optional[str] = None,  # deprecated: use exchange=
+    compress_mode: str = "two_phase",  # deprecated: use exchange=
     mesh=None,
 ):
-    """Returns step(params, opt_state, batch, key) -> (params, state, metrics).
+    """Returns step(params, opt_state, ex_state, batch, key)
+    -> (params, opt_state, ex_state, metrics).
 
-    With ``compress_axis`` set, the returned function must be jitted under
-    ``mesh`` and wraps a shard_map over that axis (params replicated across
-    it, batch sharded, all other mesh axes left to GSPMD via ``auto``).
+    With an ``exchange`` configured, the returned function must be jitted
+    under ``mesh`` and wraps a shard_map over ``exchange.axis_name``
+    (params replicated across it, batch sharded, all other mesh axes left
+    to GSPMD via ``auto``).  ``ex_state`` is the ExchangeState from
+    ``make_exchange(cfg).init_state()`` (or ``null_exchange_state()`` when
+    no exchange is configured — the signature is uniform either way).
     """
+    if exchange is None:
+        exchange = _legacy_exchange_config(quant, compress_axis, compress_mode)
+    ex = make_exchange(exchange) if isinstance(exchange, ExchangeConfig) else exchange
+
     loss_fn = make_loss_fn(model)
     grad_fn = jax.value_and_grad(loss_fn)
-    levels = uniform_levels(quant.num_levels) if quant else None
+    axis_name = ex.cfg.axis_name if ex is not None else None
 
-    def exchange(grads, key):
-        if compress_axis is None:
-            return grads  # XLA's exact psum/reduce-scatter handles it
-        if compress_mode == "leafwise":
-            # sharding-preserving path (production mesh: inner axes auto)
-            return compressed_pmean_leafwise(grads, compress_axis, levels, key, quant)
-        return compressed_pmean_tree(
-            grads, compress_axis, levels, key, quant, mode=compress_mode
-        )
+    def exchange_grads(grads, ex_state, key):
+        if ex is None:
+            return grads, ex_state  # XLA's exact psum/reduce-scatter handles it
+        # pmean_tree routes mode="leafwise" to the sharding-preserving
+        # per-leaf path internally (production mesh: inner axes auto)
+        return ex.pmean_tree(grads, ex_state, key)
 
-    def core_step(params, opt_state, batch, key):
+    def core_step(params, opt_state, ex_state, batch, key):
         k1, k2 = jax.random.split(key)
+        st_in = ex_state
         if opt_cfg.name == "extra_adam":
             loss1, g1 = grad_fn(params, batch)
-            g1 = exchange(g1, k1)
+            g1, ex_state = exchange_grads(g1, ex_state, k1)
             params_half = opt.extrapolate(opt_cfg, params, opt_state, g1)
             loss, g2 = grad_fn(params_half, batch)
-            g2 = exchange(g2, k2)
+            g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
         elif opt_cfg.name == "optimistic_adam":
             prev = opt_state.prev_half_grad
             params_half = opt.extrapolate(opt_cfg, params, opt_state, prev)
             loss, g2 = grad_fn(params_half, batch)
-            g2 = exchange(g2, k2)
+            g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
         else:  # adam baseline
-            loss, g = grad_fn(params, batch)
-            g = exchange(g, k2)
-            new_params, new_state = opt.adam_step(opt_cfg, params, opt_state, g)
-        if compress_axis is not None:
-            loss = jax.lax.pmean(loss, compress_axis)  # replicated metric
-        metrics = {"loss": loss}
-        return new_params, new_state, metrics
+            loss, g2 = grad_fn(params, batch)
+            g2, ex_state = exchange_grads(g2, ex_state, k2)
+            new_params, new_state = opt.adam_step(opt_cfg, params, opt_state, g2)
+        if ex is not None:
+            loss = jax.lax.pmean(loss, axis_name)  # replicated metric
+            # analytic per-exchange operand bytes (static shapes) times the
+            # number of exchanges this step performed (= step counter delta)
+            axis_size = jax.lax.psum(1, axis_name)
+            per_call = ex.wire_bytes_tree(g2, axis_size)
+            n_calls = (ex_state.step - st_in.step).astype(jnp.float32)
+            wire = jnp.float32(per_call) * n_calls
+        else:
+            wire = jnp.float32(0.0)
+        metrics = {"loss": loss, "wire_bytes": wire}
+        return new_params, new_state, ex_state, metrics
 
-    if compress_axis is None:
+    if ex is None:
         return core_step
 
     assert mesh is not None, "compressed training needs the mesh for shard_map"
 
-    # params/opt_state replicated over the compressed axis (pure DP across
-    # it); batch sharded on its leading dim; key replicated (folded inside);
-    # all OTHER mesh axes stay under automatic (GSPMD) partitioning —
-    # shard_map's ``auto`` frozenset selects the non-manual subset.
-    def sharded_step(params, opt_state, batch, key):
+    # params/opt_state/ex_state replicated over the compressed axis (pure
+    # DP across it); batch sharded on its leading dim; key replicated
+    # (folded inside); all OTHER mesh axes stay under automatic (GSPMD)
+    # partitioning — shard_map's ``auto`` frozenset selects the non-manual
+    # subset.
+    def sharded_step(params, opt_state, ex_state, batch, key):
         batch_specs = {
-            k: P(compress_axis, *([None] * (v.ndim - 1))) for k, v in batch.items()
+            k: P(axis_name, *([None] * (v.ndim - 1))) for k, v in batch.items()
         }
         fn = shard_map(
             core_step,
             mesh=mesh,
-            in_specs=(P(), P(), batch_specs, P()),
-            out_specs=(P(), P(), {"loss": P()}),
+            in_specs=(P(), P(), P(), batch_specs, P()),
+            out_specs=(P(), P(), P(), {"loss": P(), "wire_bytes": P()}),
             check_rep=False,
-            auto=frozenset(mesh.axis_names) - {compress_axis},
+            auto=frozenset(mesh.axis_names) - {axis_name},
         )
-        return fn(params, opt_state, batch, key)
+        return fn(params, opt_state, ex_state, batch, key)
 
     return sharded_step
 

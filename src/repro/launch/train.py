@@ -2,7 +2,12 @@
 
 Runs on whatever devices are visible (1 CPU, 8 forced host devices via
 --host-devices, or a real TPU slice).  The paper's technique is enabled
-with --compression int8|int4 (+ --compress-axis data for the DDP setting).
+with --compression int8|int4 (+ --compress-axis data for the DDP setting);
+the full exchange subsystem is reachable from here: --compressor selects
+the registered compressor (qgenx | randk | layerwise | none),
+--level-schedule qada turns on adaptive levels (QAda, Section 3.3) carried
+in the explicit ExchangeState, and --use-pallas routes the exchange
+through the fused Pallas kernels.
 
 Example (CPU, reduced model, compressed 8-way DP exchange):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
@@ -41,11 +46,47 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.checkpoint import checkpointing  # noqa: E402
 from repro.configs.base import INPUT_SHAPES, ShapeConfig  # noqa: E402
 from repro.configs.registry import ARCHS, get_config  # noqa: E402
+from repro.core.exchange import (  # noqa: E402
+    ExchangeConfig,
+    make_exchange,
+    null_exchange_state,
+    registered_compressors,
+)
 from repro.core.quantization import QuantConfig  # noqa: E402
 from repro.data.pipeline import add_modality_stubs, make_pipeline  # noqa: E402
 from repro.launch.steps import make_train_step  # noqa: E402
 from repro.models.model import build, param_pspecs  # noqa: E402
 from repro.optim import optimizers as opt  # noqa: E402
+
+
+def build_exchange_config(args, n_dev: int):
+    """Translate CLI flags into one ExchangeConfig (or None = no exchange).
+
+    This is the only place the launcher decides between the compressed
+    shard_map path and plain GSPMD training; every knob the exchange has
+    (kernel flags, level schedule, compressor choice) rides in the config.
+    """
+    quant = None
+    if args.compression != "none":
+        bits = 8 if args.compression == "int8" else 4
+        quant = QuantConfig(num_levels=15 if bits == 8 else 5, bits=bits,
+                            bucket_size=512)
+    # exchange is active when there is something to compress (or an
+    # explicitly requested non-default compressor) and >1 device to cross
+    active = n_dev > 1 and (quant is not None or args.compressor != "qgenx")
+    if not active:
+        return None
+    return ExchangeConfig(
+        compressor=args.compressor,
+        quant=quant,
+        mode=args.compress_mode,
+        axis_name=args.compress_axis,
+        use_pallas=args.use_pallas,
+        interpret=True,  # CPU container; real TPU launchers flip this off
+        level_schedule=args.level_schedule,
+        level_update_every=args.level_update_every,
+        rand_frac=args.rand_frac,
+    )
 
 
 def main(argv=None):
@@ -60,9 +101,19 @@ def main(argv=None):
                     choices=("adam", "extra_adam", "optimistic_adam"))
     ap.add_argument("--compression", default="none",
                     choices=("none", "int8", "int4"))
+    ap.add_argument("--compressor", default="qgenx",
+                    choices=sorted(registered_compressors()))
     ap.add_argument("--compress-axis", default="data")
     ap.add_argument("--compress-mode", default="two_phase",
                     choices=("two_phase", "gather", "leafwise"))
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route the exchange through the fused Pallas kernels")
+    ap.add_argument("--level-schedule", default="fixed",
+                    choices=("fixed", "qada"))
+    ap.add_argument("--level-update-every", type=int, default=0,
+                    help="QAda refresh period in exchange calls (qada schedule)")
+    ap.add_argument("--rand-frac", type=float, default=0.25,
+                    help="randk: fraction of coordinates kept per worker")
     ap.add_argument("--host-devices", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
@@ -85,17 +136,16 @@ def main(argv=None):
     opt_cfg = opt.OptimizerConfig(name=args.optimizer, lr=args.lr)
     opt_state = opt.init_state(opt_cfg, params)
 
-    quant = None
-    if args.compression != "none":
-        bits = 8 if args.compression == "int8" else 4
-        quant = QuantConfig(num_levels=15 if bits == 8 else 5, bits=bits,
-                            bucket_size=512)
-    compress_axis = args.compress_axis if (quant and n_dev > 1) else None
+    ex_cfg = build_exchange_config(args, n_dev)
+    ex = make_exchange(ex_cfg) if ex_cfg is not None else None
+    ex_state = ex.init_state() if ex is not None else null_exchange_state()
+    if ex is not None:
+        print(f"[train] exchange: compressor={ex_cfg.compressor} "
+              f"mode={ex_cfg.mode} axis={ex_cfg.axis_name} "
+              f"use_pallas={ex_cfg.use_pallas} schedule={ex_cfg.level_schedule}",
+              flush=True)
 
-    step_fn = make_train_step(
-        model, opt_cfg, quant=quant, compress_axis=compress_axis,
-        compress_mode=args.compress_mode, mesh=mesh,
-    )
+    step_fn = make_train_step(model, opt_cfg, exchange=ex, mesh=mesh)
     repl = NamedSharding(mesh, P())
     dp = NamedSharding(mesh, P("data"))
     batch_sharding = {"tokens": NamedSharding(mesh, P("data", None)),
@@ -107,9 +157,23 @@ def main(argv=None):
 
     start_step = 0
     if args.checkpoint_dir and checkpointing.latest_step(args.checkpoint_dir):
-        start_step, trees = checkpointing.restore(
-            args.checkpoint_dir, {"params": params, "opt_state": opt_state}
-        )
+        # ExchangeState is training state (QAda levels/stats/counter) and
+        # rides in the checkpoint; checkpoints without it, or with a state
+        # saved under a different exchange config (shape mismatch), restore
+        # params/opt_state and keep the freshly-initialized exchange state
+        try:
+            start_step, trees = checkpointing.restore(
+                args.checkpoint_dir,
+                {"params": params, "opt_state": opt_state,
+                 "ex_state": ex_state},
+            )
+            ex_state = trees["ex_state"]
+        except (KeyError, AssertionError):
+            start_step, trees = checkpointing.restore(
+                args.checkpoint_dir, {"params": params, "opt_state": opt_state}
+            )
+            print("[train] checkpoint has no compatible ex_state; "
+                  "exchange state reset")
         params, opt_state = trees["params"], trees["opt_state"]
         pipe.restore({"step": start_step, "seed": args.seed})
         print(f"[train] restored step {start_step}")
@@ -125,26 +189,32 @@ def main(argv=None):
         batch = fixed_batch if args.repeat_batch else add_modality_stubs(
             next(pipe), cfg, seed=args.seed)
         t0 = time.time()
-        params, opt_state, metrics = jitted(
-            params, opt_state, batch, jax.random.fold_in(key, step)
+        params, opt_state, ex_state, metrics = jitted(
+            params, opt_state, ex_state, batch, jax.random.fold_in(key, step)
         )
         loss = float(metrics["loss"])
+        wire = float(metrics["wire_bytes"])
         times.append(time.time() - t0)
         if step % args.log_every == 0:
             print(f"[train] step={step} loss={loss:.4f} "
-                  f"dt={times[-1]*1e3:.0f}ms", flush=True)
+                  f"dt={times[-1]*1e3:.0f}ms wire={wire:.3e}B", flush=True)
         if args.checkpoint_dir and args.checkpoint_every and (
             (step + 1) % args.checkpoint_every == 0
         ):
             checkpointing.save(
                 args.checkpoint_dir, step + 1,
-                {"params": params, "opt_state": opt_state},
+                {"params": params, "opt_state": opt_state,
+                 "ex_state": ex_state},
             )
     if args.checkpoint_dir:
         checkpointing.save(
             args.checkpoint_dir, args.steps,
-            {"params": params, "opt_state": opt_state},
+            {"params": params, "opt_state": opt_state, "ex_state": ex_state},
         )
+    if (ex is not None and ex_cfg.level_schedule == "qada"
+            and ex.compressor.has_levels):
+        print(f"[train] qada levels={np.round(np.asarray(ex_state.levels), 4)}",
+              flush=True)
     med = sorted(times[1:])[len(times[1:]) // 2] if len(times) > 1 else times[0]
     print(f"[train] done. final_loss={loss:.4f} median_step={med*1e3:.0f}ms")
     return loss

@@ -1,0 +1,83 @@
+"""Subprocess payload: per-step wire_bytes metric == trace-time recorder.
+
+Run with 8 forced host devices.  Builds a real train step through
+``make_train_step`` with an ExchangeConfig (the jnp reference path — see
+tests/_multidev_collectives.py for why interpret-mode Pallas can starve
+the collective rendezvous here), records every collective operand at
+trace time, executes one step, and asserts:
+
+1. metrics["wire_bytes"] (the Exchange's analytic accounting) equals the
+   sum of the recorded operand bytes — extra_adam performs TWO exchanges
+   per step, both must be counted;
+2. the ExchangeState actually threads (step counter = 2 after one step);
+3. the same holds in "gather" and "two_phase" modes and for int4 (packed
+   payload on the wire).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+import repro.core.exchange as exchange_mod  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+from repro.core.exchange import ExchangeConfig, make_exchange  # noqa: E402
+from repro.core.quantization import QuantConfig  # noqa: E402
+from repro.launch.steps import make_train_step  # noqa: E402
+from repro.models.model import build  # noqa: E402
+from repro.optim import optimizers as opt  # noqa: E402
+
+K = 8
+assert jax.device_count() == K, jax.device_count()
+mesh = Mesh(np.array(jax.devices()).reshape(K), ("data",))
+
+cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                          dtype="float32")
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt_cfg = opt.OptimizerConfig(name="extra_adam", lr=1e-3)
+batch = {
+    "tokens": jnp.zeros((16, 32), jnp.int32),
+    "labels": jnp.zeros((16, 32), jnp.int32),
+}
+
+for bits, mode in ((8, "two_phase"), (8, "gather"), (4, "two_phase")):
+    quant = QuantConfig(num_levels=15 if bits == 8 else 5, bits=bits,
+                        bucket_size=256)
+    ex_cfg = ExchangeConfig(compressor="qgenx", quant=quant, mode=mode,
+                            axis_name="data")
+    ex = make_exchange(ex_cfg)
+    step = make_train_step(model, opt_cfg, exchange=ex, mesh=mesh)
+    opt_state = opt.init_state(opt_cfg, params)
+    ex_state = ex.init_state()
+
+    exchange_mod.wire_trace_start()
+    with mesh:
+        _, _, ex_state, metrics = jax.jit(step)(
+            params, opt_state, ex_state, batch, jax.random.PRNGKey(1)
+        )
+    rec = exchange_mod.wire_trace_stop()
+
+    recorded = sum(b for _, b in rec)
+    metric = float(metrics["wire_bytes"])
+    assert rec, "nothing recorded — exchange did not trace"
+    assert recorded == metric, (bits, mode, recorded, metric, rec)
+    assert int(ex_state.step) == 2, int(ex_state.step)  # both exchanges
+    # cross-check against the standalone analytic accounting on the
+    # fused gradient size (2 exchanges per extra_adam step)
+    n = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    want = 2 * sum(
+        exchange_mod.exchange_buffer_bytes(n, K, quant, mode).values()
+    )
+    assert metric == want, (bits, mode, metric, want)
+    assert np.isfinite(float(metrics["loss"]))
+    print(f"PASS bits={bits} mode={mode} wire={metric:.0f}B "
+          f"({len(rec)} operands)", flush=True)
+
+print("ALL OK", flush=True)

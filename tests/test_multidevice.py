@@ -27,6 +27,14 @@ def test_compressed_collectives_8dev():
     assert "ALL OK" in r.stdout
 
 
+def test_train_step_wire_metric_8dev():
+    """metrics["wire_bytes"] emitted by the train step == the trace-time
+    wire recorder, across (bits, mode), on 8 devices."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_train_metrics.py")])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
 def test_train_compressed_8dev():
     """End-to-end: 8-way DP training with int8 two-phase exchange learns."""
     r = _run([

@@ -13,6 +13,7 @@ from repro.checkpoint import checkpointing
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_config
 from repro.data.pipeline import make_pipeline
+from repro.core.exchange import null_exchange_state
 from repro.launch.hlo_analysis import analyze_collectives
 from repro.launch.steps import make_train_step
 from repro.models.model import build
@@ -76,12 +77,15 @@ def test_train_step_reduces_loss(name):
     ocfg = opt.OptimizerConfig(name=name, lr=3e-3)
     state = opt.init_state(ocfg, params)
     step = jax.jit(make_train_step(model, ocfg))
+    ex_state = null_exchange_state()
     shape = ShapeConfig("t", 64, 8, "train")
     pipe = make_pipeline(cfg, shape, seed=1)
     losses = []
     batch = next(pipe)  # single repeated batch: loss must drop fast
     for i in range(30):
-        params, state, m = step(params, state, batch, jax.random.fold_in(KEY, i))
+        params, state, ex_state, m = step(
+            params, state, ex_state, batch, jax.random.fold_in(KEY, i)
+        )
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] - 0.5, (name, losses[0], losses[-1])
 
