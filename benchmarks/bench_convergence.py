@@ -7,9 +7,16 @@ Emits the measured restricted-gap decay across T for:
   * Q-GenX vs QSGDA on the bilinear problem (Fig. 4)
   * quantized (UQ8/UQ4) vs full-precision Q-GenX (rate preservation +
     bits-per-iteration savings)
+  * MODEL SCALE: the qgenx optimizer (adaptive gamma rule through
+    make_train_step) vs extra_adam/adam on a reduced LM, and the
+    sync_every local-update wire/quality trade-off (K in {1, 4, 16},
+    8 forced host devices, subprocess)
 """
 
 import math
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -129,6 +136,82 @@ def run():
         f"{t}_gap={g:.4f};{t}_bits={b:.2e}" for t, (g, b) in results.items()
     )
     emit("exchange_registry_rate_preservation", 0.0, derived)
+
+    # --- model scale: the paper's optimizer vs the adam family ----------
+    _model_scale_qgenx_vs_extra_adam()
+    _sync_every_tradeoff()
+
+
+def _model_scale_qgenx_vs_extra_adam(steps: int = 12):
+    """Same reduced LM, same batches: qgenx (adaptive gamma, no tuning
+    beyond gamma_scale) vs extra_adam vs adam, through make_train_step."""
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.core.exchange import null_exchange_state
+    from repro.launch.steps import make_train_step
+    from repro.models.model import build
+    from repro.optim import optimizers as opt
+
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              dtype="float32")
+    model = build(cfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 256)
+    batch = {"tokens": toks, "labels": toks}
+    results = {}
+    t0 = time.perf_counter()
+    for name, kw in (("adam", {"lr": 1e-3}),
+                     ("extra_adam", {"lr": 1e-3}),
+                     ("qgenx", {"gamma_scale": 0.02})):
+        ocfg = opt.OptimizerConfig(name=name, **kw)
+        step = jax.jit(make_train_step(model, ocfg))
+        params, st, ex_st = params0, opt.init_state(ocfg, params0), \
+            null_exchange_state()
+        for t in range(steps):
+            params, st, ex_st, m = step(params, st, ex_st, batch,
+                                        jax.random.fold_in(KEY, t))
+        results[name] = float(m["loss"])
+    us = (time.perf_counter() - t0) * 1e6 / (3 * steps)
+    emit("model_scale_qgenx_vs_extra_adam", us,
+         ";".join(f"{k}_loss={v:.4f}" for k, v in results.items()))
+
+
+def _sync_every_tradeoff(steps: int = 16):
+    """Wire/quality trade-off of the local-update regime: total measured
+    wire_bytes (the metric == trace recorder, see tests) and final loss
+    at sync_every in {1, 4, 16} on 8 forced host devices (subprocess —
+    this process stays single-device)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    pp = os.environ.get("PYTHONPATH")
+    env = {**os.environ, "PYTHONPATH": src + os.pathsep + pp if pp else src}
+    rows = []
+    for sync in (1, 4, 16):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train",
+             "--arch", "tinyllama-1.1b", "--reduced", "--host-devices", "8",
+             "--steps", str(steps), "--batch", "16", "--seq", "32",
+             "--repeat-batch", "--optimizer", "qgenx",
+             "--gamma-scale", "0.02", "--compression", "int8",
+             "--compress-axis", "data", "--sync-every", str(sync)],
+            cwd=root, env=env, capture_output=True, text=True, timeout=900,
+        )
+        if r.returncode != 0:
+            emit(f"sync_every{sync}_wire_quality", 0.0,
+                 "ERROR=" + r.stderr[-160:].replace("\n", " "))
+            continue
+        lines = [l for l in r.stdout.splitlines()
+                 if l.startswith("[train] step=")]
+        wire = sum(float(l.split("wire=")[1].split("B")[0]) for l in lines)
+        loss = float(r.stdout.split("final_loss=")[1].split()[0])
+        rows.append((sync, wire, loss))
+        emit(f"sync_every{sync}_wire_quality", 0.0,
+             f"total_wire={wire:.3e}B;final_loss={loss:.4f}")
+    if len(rows) > 1 and rows[0][0] == 1:  # reductions need the K=1 baseline
+        base = rows[0][1]
+        emit("sync_every_wire_reduction", 0.0,
+             ";".join(f"K{s}={base / w:.2f}x" for s, w, _ in rows if w))
 
 
 if __name__ == "__main__":

@@ -172,6 +172,22 @@ def run():
             emit(f"wire_bytes_{tag}_K{K}", 0.0,
                  f"bytes={ex.wire_bytes(n, K):.3e}")
 
+    # local-update regime (ExchangeConfig.sync_every): amortized bytes per
+    # optimizer step — 2 grad exchanges + the f32 drift probe paid once
+    # every sync_every steps (extragradient step, 16-way axis, uq8
+    # two_phase; same analytic accounting the train step's wire_bytes
+    # metric emits and the trace recorder confirms)
+    ex = make_exchange(ExchangeConfig(
+        compressor="qgenx",
+        quant=QuantConfig(num_levels=15, bits=8, bucket_size=1024),
+    ))
+    base = 2 * ex.wire_bytes(n, 16)
+    probe_bytes = 4.0 * ex.cfg.drift_probe  # single-sourced with the metric
+    for sync in (1, 4, 16):
+        per_step = (base + (probe_bytes if sync > 1 else 0.0)) / sync
+        emit(f"wire_bytes_sync_every{sync}_uq8_two_phase_K16", 0.0,
+             f"bytes_per_step={per_step:.3e};reduction={base / per_step:.2f}x")
+
 
 if __name__ == "__main__":
     run()

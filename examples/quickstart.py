@@ -10,6 +10,10 @@
    exchange, no step-size tuning (the adaptive rule does it) — the same
    Exchange seam the model-scale train step uses, so swapping the
    compressor (qgenx -> randk) is a one-line config change.
+4. Run the SAME adaptive algorithm as a model-scale optimizer
+   (--optimizer qgenx in the train CLI): a real train step built by
+   make_train_step, with the exchange gated to every 2nd step
+   (sync_every — wire bytes move only on sync steps).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -88,4 +92,40 @@ for tag, exchange in (
     st = qgenx_run(x0, oracle, qcfg, key, 2048)
     print(f"Q-GenX[{tag:>5}]  gap={restricted_gap(vi, st.x_avg):.4f}  "
           f"bits/worker={float(st.bits_sent):.2e}")
+
+# --- 4. the same algorithm at model scale (the production train step) --------
+import dataclasses
+
+from jax.sharding import Mesh
+
+from repro.configs.registry import get_config
+from repro.launch.steps import make_train_step
+from repro.models.model import build
+from repro.optim import optimizers as opt
+
+mcfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                           dtype="float32")
+model = build(mcfg)
+params = model.init(jax.random.PRNGKey(0))
+opt_cfg = opt.OptimizerConfig(name="qgenx", gamma_scale=0.02)
+opt_state = opt.init_state(opt_cfg, params)  # anchor/dual/sum_sq pytree
+ex = make_exchange(ExchangeConfig(
+    compressor="qgenx", quant=QuantConfig(num_levels=15, bucket_size=256),
+    mode="gather", axis_name="data", sync_every=2,
+))
+mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+step = jax.jit(make_train_step(model, opt_cfg, exchange=ex, mesh=mesh))
+ex_state = ex.init_state()
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 256)
+batch = {"tokens": toks, "labels": toks}
+with mesh:
+    for t in range(4):
+        params, opt_state, ex_state, metrics = step(
+            params, opt_state, ex_state, batch, jax.random.fold_in(key, t)
+        )
+        print(f"qgenx@model step={t} loss={float(metrics['loss']):.4f} "
+              f"wire={float(metrics['wire_bytes']):.2e}B "
+              f"(sync step: {t % 2 == 1})")
+print(f"adaptive statistic sum_sq={float(opt_state.sum_sq):.3e} "
+      f"(gamma self-tunes, no lr schedule)")
 print("done.")

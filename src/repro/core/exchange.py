@@ -88,13 +88,28 @@ def wire_trace_start() -> None:
 
     Recording happens at *trace* time (shapes are static), so it works
     under jit/shard_map — but only when the enclosing function is actually
-    traced; re-running a cached jit records nothing.
+    traced; re-running a cached jit records nothing.  Both branches of a
+    ``lax.cond`` are traced, so a gated exchange records its operands once
+    per call site regardless of which branch runs.
+
+    Example — assert a train step's wire metric is honest (with
+    ``sync_every > 1`` compare against a *sync* step's metric: the
+    recorder sees the traced exchange operands even when the first
+    executed step skips them)::
+
+        wire_trace_start()
+        _, _, ex_state, metrics = jax.jit(step)(params, opt_st, ex_st,
+                                               batch, key)
+        recorded = sum(nbytes for _, nbytes in wire_trace_stop())
+        assert recorded == float(metrics["wire_bytes"])  # sync_every == 1
     """
     global _WIRE_TRACE
     _WIRE_TRACE = []
 
 
 def wire_trace_stop() -> list:
+    """End recording; return the ``[(name, nbytes), ...]`` collected since
+    :func:`wire_trace_start` (empty list if nothing was traced)."""
     global _WIRE_TRACE
     rec, _WIRE_TRACE = _WIRE_TRACE, None
     return rec or []
@@ -105,6 +120,18 @@ def _record_wire(name: str, arr) -> None:
         _WIRE_TRACE.append((name, int(arr.size) * arr.dtype.itemsize))
 
 
+def record_wire(name: str, arr) -> None:
+    """Public hook: count ``arr`` as a collective operand in the active
+    wire trace.  For callers outside this module that hand their own
+    buffers to collectives and want the accounting to stay honest (e.g.
+    the train step's ``sync_every`` drift probe)::
+
+        record_wire("drift_probe", probe)
+        probe_mean = jax.lax.pmean(probe, axis_name)
+    """
+    _record_wire(name, arr)
+
+
 def exchange_buffer_bytes(
     n: int, axis_size: int, cfg: QuantConfig, mode: str = "two_phase"
 ) -> dict:
@@ -113,6 +140,14 @@ def exchange_buffer_bytes(
     Matches ``size * itemsize`` of the arrays the qgenx exchange passes to
     ``all_gather`` / ``all_to_all`` — the honest wire numbers, including
     bucket/chunk padding and int4 packing.
+
+    Example::
+
+        >>> exchange_buffer_bytes(4096, axis_size=8,
+        ...                       cfg=QuantConfig(num_levels=15, bits=8,
+        ...                                       bucket_size=512),
+        ...                       mode="gather")
+        {'gather_payload': 4096, 'gather_norms': 32}
     """
     per = 1.0 if cfg.bits == 8 else 0.5
     b = cfg.bucket_size
@@ -431,6 +466,18 @@ _DEFAULT_QUANT_HI = QuantConfig(num_levels=15, bits=8, bucket_size=512)
 class ExchangeConfig:
     """Everything the exchange needs, in one frozen (hashable) bundle.
 
+    Frozen + hashable means it is safe as a jit static argument and as a
+    field of other frozen configs; ``make_exchange`` caches on it.
+
+    Example — the paper's DDP-over-Ethernet setting, int8 two-phase::
+
+        cfg = ExchangeConfig(
+            compressor="qgenx",
+            quant=QuantConfig(num_levels=15, bits=8, bucket_size=512),
+            mode="two_phase", axis_name="data",
+        )
+        ex = make_exchange(cfg)
+
     Attributes:
       compressor: registry name — "none" | "qgenx" | "randk" | "layerwise".
       quant: the quantizer config (qgenx: the config; layerwise: the
@@ -449,6 +496,16 @@ class ExchangeConfig:
       rand_frac: randk — fraction of coordinates each worker keeps.
       layerwise_threshold: leaves with more elements than this take the
         low-bit ``quant`` config; the rest take ``quant_small``.
+      sync_every: local-update regime (Beznosikov et al. 2023; Zhang &
+        Stich 2023): workers take ``sync_every`` local (extra)gradient
+        steps between compressed exchanges.  1 (default) = exchange every
+        step (the classic Algorithm 1 path, byte-identical to a config
+        without the field); K>1 = the train step gates its exchanges
+        behind ``lax.cond`` so collective traffic only happens on every
+        K-th step (wire_bytes metric and trace recorder agree), and emits
+        a ``param_drift`` metric from a small f32 probe of the params.
+      drift_probe: number of leading parameter coordinates in the drift
+        probe (the only extra wire traffic a sync step pays; counted).
     """
 
     compressor: str = "qgenx"
@@ -466,6 +523,8 @@ class ExchangeConfig:
     qada_bisect_iters: int = 20
     rand_frac: float = 0.25
     layerwise_threshold: int = 65536
+    sync_every: int = 1
+    drift_probe: int = 4096
 
     def __post_init__(self):
         if self.mode not in ("gather", "two_phase", "leafwise"):
@@ -476,6 +535,10 @@ class ExchangeConfig:
             raise ValueError("level_schedule='qada' needs level_update_every > 0")
         if not (0.0 < self.rand_frac <= 1.0):
             raise ValueError(f"rand_frac must be in (0, 1], got {self.rand_frac}")
+        if self.sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {self.sync_every}")
+        if self.drift_probe < 1:
+            raise ValueError(f"drift_probe must be >= 1, got {self.drift_probe}")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -483,7 +546,18 @@ class ExchangeConfig:
 class ExchangeState:
     """Explicit exchange state, threaded through the train step as a pytree.
 
-    levels: current level table of the primary quantizer (qgenx, and the
+    Produced by ``Exchange.init_state()`` and returned (possibly updated)
+    by every ``Exchange.pmean*`` call; the caller owns the threading::
+
+        state = ex.init_state()
+        mean, state = ex.pmean(x, state, key)     # inside shard_map
+        assert int(state.step) == 1
+
+    It rides in train checkpoints next to params/opt_state (QAda level
+    refreshes survive restarts; incompatible states reset gracefully).
+
+    Attributes:
+      levels: current level table of the primary quantizer (qgenx, and the
       layerwise small-leaf group); a [2] placeholder for none/randk.
     levels_lo: layerwise large-leaf (low-bit) table; [2] placeholder
       elsewhere.
@@ -523,13 +597,27 @@ _REGISTRY: dict = {}
 
 
 def register_compressor(cls):
-    """Class decorator: add a Compressor implementation to the registry."""
+    """Class decorator: add a Compressor implementation to the registry.
+
+    The decorated class is instantiated once and keyed on its ``name``;
+    it is immediately reachable from every consumer (ExchangeConfig, the
+    train CLI's ``--compressor``, the contract tests)::
+
+        @register_compressor
+        class TopKCompressor(Compressor):
+            name = "topk"
+            def pmean(self, x, cfg, state, key): ...
+            def compress(self, v, cfg, levels, key): ...   # E[.] = v !
+            def wire_bytes(self, n, axis_size, cfg): ...
+    """
     inst = cls()
     _REGISTRY[inst.name] = inst
     return cls
 
 
 def get_compressor(name: str):
+    """Registry lookup: ``get_compressor("qgenx").name == "qgenx"``;
+    unknown names raise ValueError listing what IS registered."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -539,6 +627,8 @@ def get_compressor(name: str):
 
 
 def registered_compressors() -> tuple:
+    """Sorted names, e.g. ``('layerwise', 'none', 'qgenx', 'randk')`` —
+    the train CLI's ``--compressor`` choices come from here."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -548,7 +638,14 @@ class Compressor:
     ``pmean`` runs inside shard_map and may use collectives; ``compress``
     is the collective-free per-worker point estimate hat{v} = DEQ(Q(v))
     used by the simulated-worker paths (Q-GenX loop, WGAN testbed) and by
-    the unbiasedness contract test.
+    the unbiasedness contract test (which parametrizes over the whole
+    registry — a new compressor is contract-tested for free).
+
+    Minimal unbiasedness check every implementation must satisfy::
+
+        ex = make_exchange(cfg)
+        draws = jax.vmap(lambda k: ex.compress(v, state, k))(keys)
+        assert jnp.allclose(draws.mean(0), v, atol=the_variance_bound)
     """
 
     name = "?"
@@ -896,7 +993,18 @@ class Exchange:
     All ``pmean*`` methods must run inside shard_map with
     ``cfg.axis_name`` in scope; they return ``(mean, new_state)`` so the
     caller threads :class:`ExchangeState` explicitly (that is what makes
-    QAda level schedules reachable from jitted training steps)."""
+    QAda level schedules reachable from jitted training steps).
+
+    Example — the whole lifecycle::
+
+        ex = make_exchange(ExchangeConfig(
+            compressor="qgenx", quant=qcfg, axis_name="data"))
+        state = ex.init_state()
+        # inside shard_map over "data":
+        mean_tree, state = ex.pmean_tree(grads, state, key)
+        # analytic accounting (== what the trace recorder would see):
+        bytes_per_call = ex.wire_bytes_tree(grads, axis_size=8)
+    """
 
     def __init__(self, cfg: ExchangeConfig):
         self.cfg = cfg
@@ -1076,7 +1184,16 @@ class Exchange:
 
 @functools.lru_cache(maxsize=None)
 def make_exchange(cfg: ExchangeConfig) -> Exchange:
-    """Build (and cache — ExchangeConfig is frozen/hashable) an Exchange."""
+    """Build (and cache — ExchangeConfig is frozen/hashable) an Exchange.
+
+    Invalid combinations fail loudly here (``Compressor.validate``), not
+    deep inside a traced step::
+
+        >>> make_exchange(ExchangeConfig(compressor="randk",
+        ...                              mode="leafwise"))
+        Traceback (most recent call last):
+        ValueError: compressor 'randk' has no sharding-preserving ...
+    """
     ex = Exchange(cfg)
     ex.compressor.validate(cfg)
     return ex

@@ -121,8 +121,32 @@ def qgenx_init(x0: Array, cfg: QGenXConfig) -> QGenXState:
     )
 
 
-def _gamma(sum_sq: Array, K: int, scale: float) -> Array:
+def adaptive_gamma(sum_sq: Array, K, scale: float) -> Array:
+    """The paper's adaptive step-size rule (Theorems 3/4).
+
+        gamma_t = scale * K * (1 + sum_sq)^{-1/2}
+
+    where ``sum_sq`` is the running sum of squared oracle differences
+    ``sum_{i<t} sum_k ||Vhat_{k,i} - Vhat_{k,i+1/2}||^2``.  This single
+    function is THE step-size rule — both the toy VI loop
+    (:func:`qgenx_step`) and the model-scale optimizer
+    (:mod:`repro.optim.qgenx`) call it, so the two cannot drift apart
+    (bit-identical on the same ``sum_sq`` sequence; tested in
+    ``tests/test_qgenx_optimizer.py``).
+
+    ``K`` may be a Python int (toy loop, static worker count) or a traced
+    scalar (model scale, ``lax.psum(1, axis)`` inside shard_map).
+
+    Example::
+
+        >>> adaptive_gamma(jnp.float32(0.0), K=4, scale=1.0)   # gamma_1 = K
+        Array(4., dtype=float32)
+    """
     return scale * K * jax.lax.rsqrt(1.0 + sum_sq)
+
+
+# private alias kept for pre-existing call sites / tests
+_gamma = adaptive_gamma
 
 
 def _maybe_quantize(

@@ -136,6 +136,7 @@ def lower_combo(
     quant_bits: int = 8,
     overrides=None,
     tag: str = "",
+    optimizer: str = "extra_adam",
 ):
     _hlo_tag = tag
     """Lower+compile one (arch, shape) on the given mesh. Returns report."""
@@ -178,13 +179,26 @@ def lower_combo(
     repl = NamedSharding(mesh, P())
 
     if shape.kind == "train":
-        opt_cfg = opt.OptimizerConfig(name="extra_adam")
-        opt_shape = jax.eval_shape(lambda: opt.init_state(opt_cfg, params_shape))
-        # moments shard like their params; count replicated
-        opt_pspecs = opt.AdamState(
-            mu=pspecs, nu=pspecs, count=P(),
-            prev_half_grad=None,
+        opt_cfg = opt.OptimizerConfig(name=optimizer)
+        # params as an argument (not a closure) so abstract leaves trace
+        opt_shape = jax.eval_shape(
+            lambda p: opt.init_state(opt_cfg, p), params_shape
         )
+        if optimizer == "qgenx":
+            # anchor/dual accumulator shard like their params; scalars
+            # (sum_sq, count) replicated
+            from repro.optim.qgenx import QGenXOptState
+
+            opt_pspecs = QGenXOptState(
+                anchor=pspecs, y=pspecs, sum_sq=P(), count=P(),
+            )
+        else:
+            # moments shard like their params; count replicated; the
+            # optimistic variant carries a params-shaped half-step grad
+            opt_pspecs = opt.AdamState(
+                mu=pspecs, nu=pspecs, count=P(),
+                prev_half_grad=pspecs if optimizer == "optimistic_adam" else None,
+            )
         opt_sharding = _shardings(mesh, opt_pspecs)
         if mode == "qgenx" and quant_bits < 32:
             quant = QuantConfig(
@@ -206,7 +220,8 @@ def lower_combo(
             ex.init_state if ex is not None else null_exchange_state
         )
         ex_sharding = jax.tree_util.tree_map(lambda _: repl, ex_struct)
-        metric_sharding = {"loss": repl, "wire_bytes": repl}
+        metric_sharding = {"loss": repl, "wire_bytes": repl,
+                           "param_drift": repl}
         jitted = jax.jit(
             step,
             in_shardings=(param_sharding, opt_sharding, ex_sharding,
@@ -321,14 +336,16 @@ def lower_combo(
 
 
 def run_and_save(arch, shape_name, mesh_kind, mode, out_dir, overrides=None,
-                 tag="", quant_bits=8):
+                 tag="", quant_bits=8, optimizer="extra_adam"):
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     name = f"{arch}__{shape_name}__{mesh_kind}__{mode}"
+    if optimizer != "extra_adam":
+        name += f"__{optimizer}"
     if tag:
         name += f"__{tag}"
     try:
         rep = lower_combo(arch, shape_name, mesh, mode=mode, overrides=overrides,
-                          quant_bits=quant_bits, tag=tag)
+                          quant_bits=quant_bits, tag=tag, optimizer=optimizer)
         rep["tag"] = tag
         rep["overrides"] = list(overrides or [])
     except Exception as e:  # record failures as bugs to fix
@@ -368,6 +385,10 @@ def main():
     ap.add_argument("--tag", default="", help="artifact suffix for perf iters")
     ap.add_argument("--qgenx-bits", type=int, default=8, choices=(4, 8, 32),
                     help="qgenx payload width; 32 = fp32 pod-exchange control")
+    ap.add_argument("--optimizer", default="extra_adam",
+                    choices=("adam", "extra_adam", "optimistic_adam", "qgenx"),
+                    help="train-shape optimizer to lower (qgenx = the "
+                         "paper's adaptive-step-size extragradient)")
     args = ap.parse_args()
 
     archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
@@ -381,7 +402,8 @@ def main():
         for shape in shapes:
             rep = run_and_save(arch, shape, args.mesh, args.mode, args.out,
                                overrides=args.override, tag=args.tag,
-                               quant_bits=args.qgenx_bits)
+                               quant_bits=args.qgenx_bits,
+                               optimizer=args.optimizer)
             n_fail += rep["status"] == "error"
     raise SystemExit(1 if n_fail else 0)
 

@@ -25,9 +25,20 @@ level schedules available in model-scale training.  ``metrics`` carries
 ``wire_bytes``: the analytic collective-operand bytes this device moved
 this step (asserted equal to the trace-time wire recorder in tests).
 
-Optimizer = ExtraAdam family (the paper's experimental instantiation);
-both gradient exchanges of the extra-gradient step are compressed, exactly
-like Algorithm 1's two broadcast rounds.
+Optimizers: the ExtraAdam family (the paper's experimental instantiation)
+and ``qgenx`` — the paper's OWN adaptive-step-size extragradient
+(:mod:`repro.optim.qgenx`, Theorems 3/4) running on real models; both
+gradient exchanges of the extra-gradient step are compressed, exactly like
+Algorithm 1's two broadcast rounds.
+
+Local-update regime (``ExchangeConfig.sync_every = K``): workers take K
+local (extra)gradient steps between compressed exchanges.  The exchanges
+are gated behind ``lax.cond`` on the optimizer step counter, so collective
+traffic (and the ``wire_bytes`` metric) drops to ~1/K; on sync steps a
+small f32 probe of the params is pmean'd (recorded as wire traffic) to
+emit ``metrics["param_drift"]`` — the RMS per-coordinate deviation of the
+drifted local params from their cross-worker mean.  ``sync_every=1`` is
+byte-identical to the ungated path (no cond in the jaxpr).
 """
 
 from __future__ import annotations
@@ -43,10 +54,12 @@ from repro.core.exchange import (
     Exchange,
     ExchangeConfig,
     make_exchange,
+    record_wire,
 )
 from repro.core.quantization import QuantConfig
 from repro.models.model import Model
 from repro.optim import optimizers as opt
+from repro.optim import qgenx as qgenx_opt
 
 Array = jax.Array
 
@@ -112,17 +125,55 @@ def make_train_step(
     loss_fn = make_loss_fn(model)
     grad_fn = jax.value_and_grad(loss_fn)
     axis_name = ex.cfg.axis_name if ex is not None else None
+    sync_every = ex.cfg.sync_every if ex is not None else 1
 
-    def exchange_grads(grads, ex_state, key):
-        if ex is None:
-            return grads, ex_state  # XLA's exact psum/reduce-scatter handles it
-        # pmean_tree routes mode="leafwise" to the sharding-preserving
-        # per-leaf path internally (production mesh: inner axes auto)
-        return ex.pmean_tree(grads, ex_state, key)
+    def _probe(params):
+        """First ``drift_probe`` parameter coordinates as one f32 vector."""
+        chunks, have = [], 0
+        for l in jax.tree_util.tree_leaves(params):
+            if have >= ex.cfg.drift_probe:
+                break
+            take = min(l.size, ex.cfg.drift_probe - have)
+            chunks.append(l.reshape(-1)[:take].astype(jnp.float32))
+            have += take
+        return jnp.concatenate(chunks)
+
+    def _param_drift(params):
+        """RMS per-coordinate deviation of local params from the mean.
+
+        The probe pmean is real collective traffic on sync steps — it is
+        recorded at trace time and counted in the wire_bytes metric.
+        """
+        probe = _probe(params)
+        record_wire("drift_probe", probe)
+        mean = jax.lax.pmean(probe, axis_name)
+        msd = jax.lax.pmean(jnp.mean((probe - mean) ** 2), axis_name)
+        return jnp.sqrt(msd)
 
     def core_step(params, opt_state, ex_state, batch, key):
         k1, k2 = jax.random.split(key)
         st_in = ex_state
+        # local-update gating: exchanges only fire on every sync_every-th
+        # optimizer step (the counter rides in every optimizer's state)
+        if sync_every > 1:
+            is_sync = (opt_state.count % sync_every) == (sync_every - 1)
+        else:
+            is_sync = None  # statically always-on: ungated PR-2 path
+
+        def exchange_grads(grads, ex_state, key):
+            if ex is None:
+                return grads, ex_state  # XLA's exact psum handles it
+            # pmean_tree routes mode="leafwise" to the sharding-preserving
+            # per-leaf path internally (production mesh: inner axes auto)
+            if is_sync is None:
+                return ex.pmean_tree(grads, ex_state, key)
+            return jax.lax.cond(
+                is_sync,
+                lambda g, st, k: ex.pmean_tree(g, st, k),
+                lambda g, st, k: (g, st),
+                grads, ex_state, key,
+            )
+
         if opt_cfg.name == "extra_adam":
             loss1, g1 = grad_fn(params, batch)
             g1, ex_state = exchange_grads(g1, ex_state, k1)
@@ -130,6 +181,25 @@ def make_train_step(
             loss, g2 = grad_fn(params_half, batch)
             g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
+        elif opt_cfg.name == "qgenx":
+            # the paper's Algorithm 1 on the model: extragradient with the
+            # adaptive gamma rule (statistics in the QGenXOptState pytree)
+            n_workers = jax.lax.psum(1, axis_name) if ex is not None else 1
+            loss1, g1 = grad_fn(params, batch)
+            ghat1, ex_state = exchange_grads(g1, ex_state, k1)
+            params_half = qgenx_opt.extrapolate(
+                opt_cfg, params, opt_state, ghat1, n_workers
+            )
+            loss, g2 = grad_fn(params_half, batch)
+            ghat2, ex_state = exchange_grads(g2, ex_state, k2)
+            # sum_k ||g_{k,t} - g_{k,t+1/2}||^2 — the gamma-rule statistic
+            sq = qgenx_opt.local_sq_diff(g1, g2)
+            if ex is not None:
+                sq = jax.lax.psum(sq, axis_name)
+            new_params, new_state = qgenx_opt.commit(
+                opt_cfg, params, opt_state, ghat2, sq, n_workers
+            )
+            g2 = ghat2  # for the wire accounting below (same tree shapes)
         elif opt_cfg.name == "optimistic_adam":
             prev = opt_state.prev_half_grad
             params_half = opt.extrapolate(opt_cfg, params, opt_state, prev)
@@ -140,17 +210,28 @@ def make_train_step(
             loss, g2 = grad_fn(params, batch)
             g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.adam_step(opt_cfg, params, opt_state, g2)
+        drift = jnp.float32(0.0)
         if ex is not None:
             loss = jax.lax.pmean(loss, axis_name)  # replicated metric
             # analytic per-exchange operand bytes (static shapes) times the
-            # number of exchanges this step performed (= step counter delta)
+            # number of exchanges this step performed (= step counter delta;
+            # 0 on non-sync steps under the local-update regime)
             axis_size = jax.lax.psum(1, axis_name)
             per_call = ex.wire_bytes_tree(g2, axis_size)
             n_calls = (ex_state.step - st_in.step).astype(jnp.float32)
             wire = jnp.float32(per_call) * n_calls
+            if is_sync is not None:
+                # drift probe: measured (and paid) only on sync steps —
+                # params provably stay replicated when every step syncs
+                drift = jax.lax.cond(
+                    is_sync, _param_drift, lambda p: jnp.float32(0.0), params
+                )
+                n = sum(l.size for l in jax.tree_util.tree_leaves(params))
+                probe_bytes = 4.0 * min(ex.cfg.drift_probe, n)
+                wire = wire + jnp.float32(probe_bytes) * is_sync.astype(jnp.float32)
         else:
             wire = jnp.float32(0.0)
-        metrics = {"loss": loss, "wire_bytes": wire}
+        metrics = {"loss": loss, "wire_bytes": wire, "param_drift": drift}
         return new_params, new_state, ex_state, metrics
 
     if ex is None:
@@ -171,7 +252,8 @@ def make_train_step(
             core_step,
             mesh=mesh,
             in_specs=(P(), P(), P(), batch_specs, P()),
-            out_specs=(P(), P(), P(), {"loss": P(), "wire_bytes": P()}),
+            out_specs=(P(), P(), P(),
+                       {"loss": P(), "wire_bytes": P(), "param_drift": P()}),
             check_rep=False,
             auto=frozenset(mesh.axis_names) - {axis_name},
         )

@@ -86,6 +86,7 @@ def build_exchange_config(args, n_dev: int):
         level_schedule=args.level_schedule,
         level_update_every=args.level_update_every,
         rand_frac=args.rand_frac,
+        sync_every=args.sync_every,
     )
 
 
@@ -98,7 +99,10 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", default="extra_adam",
-                    choices=("adam", "extra_adam", "optimistic_adam"))
+                    choices=("adam", "extra_adam", "optimistic_adam", "qgenx"))
+    ap.add_argument("--gamma-scale", type=float, default=0.02,
+                    help="qgenx: scale on the adaptive step-size rule "
+                         "(gamma_t = scale*K/sqrt(1+sum_sq))")
     ap.add_argument("--compression", default="none",
                     choices=("none", "int8", "int4"))
     ap.add_argument("--compressor", default="qgenx",
@@ -114,6 +118,9 @@ def main(argv=None):
                     help="QAda refresh period in exchange calls (qada schedule)")
     ap.add_argument("--rand-frac", type=float, default=0.25,
                     help="randk: fraction of coordinates kept per worker")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="local-update regime: K local steps between "
+                         "compressed exchanges (1 = exchange every step)")
     ap.add_argument("--host-devices", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
@@ -133,7 +140,8 @@ def main(argv=None):
     model = build(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
-    opt_cfg = opt.OptimizerConfig(name=args.optimizer, lr=args.lr)
+    opt_cfg = opt.OptimizerConfig(name=args.optimizer, lr=args.lr,
+                                  gamma_scale=args.gamma_scale)
     opt_state = opt.init_state(opt_cfg, params)
 
     ex_cfg = build_exchange_config(args, n_dev)
@@ -142,7 +150,8 @@ def main(argv=None):
     if ex is not None:
         print(f"[train] exchange: compressor={ex_cfg.compressor} "
               f"mode={ex_cfg.mode} axis={ex_cfg.axis_name} "
-              f"use_pallas={ex_cfg.use_pallas} schedule={ex_cfg.level_schedule}",
+              f"use_pallas={ex_cfg.use_pallas} schedule={ex_cfg.level_schedule} "
+              f"sync_every={ex_cfg.sync_every}",
               flush=True)
 
     step_fn = make_train_step(model, opt_cfg, exchange=ex, mesh=mesh)
@@ -194,10 +203,12 @@ def main(argv=None):
         )
         loss = float(metrics["loss"])
         wire = float(metrics["wire_bytes"])
+        drift = float(metrics["param_drift"])
         times.append(time.time() - t0)
         if step % args.log_every == 0:
+            tail = f" drift={drift:.3e}" if args.sync_every > 1 else ""
             print(f"[train] step={step} loss={loss:.4f} "
-                  f"dt={times[-1]*1e3:.0f}ms wire={wire:.3e}B", flush=True)
+                  f"dt={times[-1]*1e3:.0f}ms wire={wire:.3e}B{tail}", flush=True)
         if args.checkpoint_dir and args.checkpoint_every and (
             (step + 1) % args.checkpoint_every == 0
         ):

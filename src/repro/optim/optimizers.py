@@ -11,6 +11,9 @@ provide the trainer-facing family:
   (2 oracle calls / step — the DE pattern of Example 3.2)
 * ``optimistic_adam`` — reuses the previous half-step gradient as the
   extrapolation direction (1 oracle call / step — OptDA, Example 3.3)
+* ``qgenx``      — the paper's OWN algorithm with the adaptive step-size
+  rule (Theorems 3/4), no tuning beyond ``gamma_scale``; implemented in
+  :mod:`repro.optim.qgenx` (2 oracle calls / step, DE pattern)
 
 All states are plain pytrees; dtypes follow MaxText practice (f32 master
 moments, bf16 params supported).
@@ -29,13 +32,14 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
-    name: str = "extra_adam"  # adam | extra_adam | optimistic_adam
+    name: str = "extra_adam"  # adam | extra_adam | optimistic_adam | qgenx
     lr: float = 1e-3
     b1: float = 0.9
     b2: float = 0.999
     eps: float = 1e-8
     weight_decay: float = 0.0
     grad_clip: float = 1.0
+    gamma_scale: float = 1.0  # qgenx: scale on the adaptive step-size rule
 
 
 class AdamState(NamedTuple):
@@ -45,7 +49,13 @@ class AdamState(NamedTuple):
     prev_half_grad: Optional[dict]  # optimistic variant only
 
 
-def init_state(cfg: OptimizerConfig, params) -> AdamState:
+def init_state(cfg: OptimizerConfig, params):
+    """Optimizer state for ``cfg.name`` — AdamState for the adam family,
+    :class:`repro.optim.qgenx.QGenXOptState` for the paper's algorithm."""
+    if cfg.name == "qgenx":
+        from repro.optim import qgenx  # local import: qgenx imports us
+
+        return qgenx.init_qgenx_state(cfg, params)
     zeros = jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params
     )

@@ -1,0 +1,146 @@
+"""Model-scale adaptive Q-GenX — the paper's algorithm as a trainer optimizer.
+
+Until this module existed, the adaptive step-size rule (Theorems 3/4 —
+O(1/T) under relative noise, O(1/sqrt(T)) under absolute noise, with NO
+step-size tuning) only ran in the toy VI loop
+(:func:`repro.core.extragradient.qgenx_step`); model-scale training fell
+back to generic adam/extra_adam.  Here the same template is packaged as a
+proper optimizer for :func:`repro.launch.steps.make_train_step`
+(``--optimizer qgenx`` on the train CLI):
+
+    X_{t+1/2} = X_t - gamma_t * ghat_t            (extrapolate)
+    Y_{t+1}   = Y_t - ghat_{t+1/2}                (dual accumulation)
+    X_{t+1}   = X_1 + gamma_{t+1} * Y_{t+1}       (commit)
+
+with the adaptive step-size shared — the very same function, not a copy —
+with the toy loop (:func:`repro.core.extragradient.adaptive_gamma`):
+
+    gamma_t = gamma_scale * K * (1 + sum_sq)^{-1/2}
+    sum_sq  = sum_{i<t} sum_k ||g_{k,i} - g_{k,i+1/2}||^2
+
+``ghat`` is the (compressed, exchanged) mean gradient the Exchange seam
+returns; ``sum_sq`` accumulates the *local* oracle differences psum-merged
+across workers (the caller supplies the increment — see
+``make_train_step``).  All sufficient statistics — the anchor X_1, the
+dual accumulator Y, the running ``sum_sq`` and the step counter — live in
+an explicit :class:`QGenXOptState` pytree threaded through the train step,
+mirroring how ``ExchangeState`` threads the exchange's statistics.
+
+Two deliberate deviations from the toy loop, both documented in
+DESIGN.md §7:
+
+* **Anchoring.**  The toy loop realizes ``X_{t+1} = gamma_{t+1} Y_{t+1}``
+  with ``Y_1 = X_1/gamma_1`` (prox-center at the origin), which shrinks
+  the initialization as gamma decays — fine for VIs anchored near 0,
+  catastrophic for a pretrained/initialized network.  Here the prox
+  center is ``X_1`` itself (``Y_1 = 0``), the standard dual-averaging
+  re-centering; for ``X_1 = 0`` the two recursions coincide bit-for-bit
+  (that identity is the parity test).
+* **The step-size statistic uses the uncompressed local gradients.**
+  Algorithm 1's ``Vhat`` are the per-worker compressed duals, which the
+  collective exchange never materializes per-worker at model scale; the
+  raw local oracle difference is the available sufficient statistic.
+
+Example (the shapes ``make_train_step`` drives)::
+
+    cfg = OptimizerConfig(name="qgenx", gamma_scale=0.02, grad_clip=1.0)
+    state = init_qgenx_state(cfg, params)
+    half = extrapolate(cfg, params, state, ghat1, num_workers=K)
+    # ... second gradient at `half`, exchanged -> ghat2; local diff psum'd
+    params, state = commit(cfg, params, state, ghat2, sq_increment, K)
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.extragradient import adaptive_gamma
+from repro.optim.optimizers import OptimizerConfig, _clip
+
+Array = jax.Array
+
+
+class QGenXOptState(NamedTuple):
+    """Sufficient statistics of the adaptive Q-GenX recursion (a pytree).
+
+    anchor: X_1 — the prox center (f32 copy of the initial params).
+    y: dual accumulator Y_t (f32, zero-initialized).
+    sum_sq: running sum of squared oracle differences feeding
+      :func:`repro.core.extragradient.adaptive_gamma`.
+    count: completed optimizer steps (also drives ``sync_every`` gating).
+    """
+
+    anchor: Any
+    y: Any
+    sum_sq: Array
+    count: Array
+
+
+def init_qgenx_state(cfg: OptimizerConfig, params) -> QGenXOptState:
+    # jnp.copy (not astype): the anchor must be a fresh buffer, never an
+    # alias of f32 params — trainers donate params and opt_state together
+    f32 = lambda p: jnp.copy(p).astype(jnp.float32)  # noqa: E731
+    return QGenXOptState(
+        anchor=jax.tree_util.tree_map(f32, params),
+        y=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        sum_sq=jnp.zeros((), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def local_sq_diff(g1, g2) -> Array:
+    """This worker's ``||g_t - g_{t+1/2}||^2`` (summed over all leaves).
+
+    The caller psums the result over the exchange axis to form the paper's
+    ``sum_k`` — the increment :func:`commit` adds to ``sum_sq``.
+    """
+    return sum(
+        jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
+        for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2))
+    )
+
+
+def extrapolate(cfg: OptimizerConfig, params, state: QGenXOptState, ghat,
+                num_workers) -> Any:
+    """First half: X_{t+1/2} = X_t - gamma_t * ghat_t.
+
+    ``ghat`` is the exchanged mean gradient at X_t; ``num_workers`` may be
+    a Python int or a traced ``lax.psum(1, axis)`` scalar.  No state is
+    committed (the half-step is a lookahead, exactly like
+    ``optimizers.extrapolate``).
+    """
+    ghat = _clip(ghat, cfg.grad_clip)
+    gamma_t = adaptive_gamma(state.sum_sq, num_workers, cfg.gamma_scale)
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - gamma_t * g.astype(jnp.float32))
+        .astype(p.dtype),
+        params, ghat,
+    )
+
+
+def commit(cfg: OptimizerConfig, params, state: QGenXOptState, ghat_half,
+           sq_increment: Array, num_workers):
+    """Second half: dual accumulation + adaptive re-projection.
+
+    Y_{t+1} = Y_t - ghat_{t+1/2};  sum_sq += sq_increment;
+    X_{t+1} = anchor + gamma_{t+1} * Y_{t+1}.
+
+    ``sq_increment`` is the psum-merged local oracle difference
+    (:func:`local_sq_diff`) — the statistic the adaptive rule is built on.
+    """
+    ghat_half = _clip(ghat_half, cfg.grad_clip)
+    y = jax.tree_util.tree_map(
+        lambda yl, g: yl - g.astype(jnp.float32), state.y, ghat_half
+    )
+    sum_sq = state.sum_sq + sq_increment.astype(jnp.float32)
+    gamma_next = adaptive_gamma(sum_sq, num_workers, cfg.gamma_scale)
+    new_params = jax.tree_util.tree_map(
+        lambda a, yl, p: (a + gamma_next * yl).astype(p.dtype),
+        state.anchor, y, params,
+    )
+    return new_params, QGenXOptState(
+        anchor=state.anchor, y=y, sum_sq=sum_sq, count=state.count + 1
+    )

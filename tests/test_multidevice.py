@@ -35,6 +35,34 @@ def test_train_step_wire_metric_8dev():
     assert "ALL OK" in r.stdout
 
 
+def test_sync_every_local_updates_8dev():
+    """sync_every=K: the paper's qgenx optimizer with exchanges gated to
+    every K-th step — bytes only on sync steps, recorder agreement, ~K×
+    wire reduction, nonzero drift between syncs."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_sync_exchange.py")])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
+def test_train_qgenx_optimizer_8dev():
+    """Acceptance: --optimizer qgenx trains via the CLI on 8 devices with
+    a compressed exchange and the local-update regime."""
+    r = _run([
+        "-m", "repro.launch.train",
+        "--arch", "tinyllama-1.1b", "--reduced", "--host-devices", "8",
+        "--steps", "16", "--batch", "16", "--seq", "32",
+        "--repeat-batch",
+        "--optimizer", "qgenx", "--gamma-scale", "0.02",
+        "--compression", "int8", "--compress-axis", "data",
+        "--sync-every", "4", "--log-every", "4",
+    ])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    lines = [l for l in r.stdout.splitlines() if l.startswith("[train] step=")]
+    first = float(lines[0].split("loss=")[1].split()[0])
+    last = float(lines[-1].split("loss=")[1].split()[0])
+    assert last < first, (first, last)
+
+
 def test_train_compressed_8dev():
     """End-to-end: 8-way DP training with int8 two-phase exchange learns."""
     r = _run([

@@ -1,0 +1,298 @@
+"""Model-scale adaptive Q-GenX optimizer + the sync_every local-update regime.
+
+Pins the PR's two contracts:
+
+* the model-scale optimizer (:mod:`repro.optim.qgenx`) runs the SAME
+  adaptive step-size rule as the toy VI loop — literally the same
+  function, and bit-identical trajectories on the same oracle sequence
+  (anchored at X_1 = 0, where the two recursions coincide exactly);
+* ``ExchangeConfig.sync_every`` gates the exchange: ``sync_every=1`` is
+  byte-identical to the PR 2 path (params + wire_bytes, no cond in the
+  jaxpr), K>1 moves bytes only on sync steps, with the trace-time
+  recorder agreeing with the metric (8-device version in
+  tests/_multidev_sync_exchange.py via test_multidevice.py).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+import repro.core.exchange as exchange_mod
+import repro.core.extragradient as eg
+from repro.configs.registry import get_config
+from repro.core.exchange import ExchangeConfig, make_exchange
+from repro.core.quantization import QuantConfig
+from repro.launch.steps import make_train_step
+from repro.models.model import build
+from repro.optim import optimizers as opt
+from repro.optim import qgenx as qgenx_opt
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _one_dev_mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def _reduced_model():
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              dtype="float32")
+    return build(cfg)
+
+
+def _batch(key, batch=4, seq=16, vocab=256):
+    toks = jax.random.randint(key, (batch, seq), 0, vocab)
+    return {"tokens": toks, "labels": toks}
+
+
+# ---------------------------------------------------------------------------
+# The gamma rule is shared, not copied
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_gamma_is_the_same_function():
+    """optim.qgenx calls core.extragradient.adaptive_gamma itself — the
+    two implementations cannot drift apart."""
+    assert qgenx_opt.adaptive_gamma is eg.adaptive_gamma
+    assert eg._gamma is eg.adaptive_gamma  # toy loop alias
+
+
+def test_adaptive_gamma_values():
+    # gamma_1 = scale * K (sum_sq = 0); halves when 1 + sum_sq quadruples
+    assert float(eg.adaptive_gamma(jnp.float32(0.0), 4, 1.0)) == 4.0
+    g1 = float(eg.adaptive_gamma(jnp.float32(3.0), 8, 0.5))
+    assert np.isclose(g1, 0.5 * 8 / 2.0)
+
+
+def test_gamma_rule_bit_identical_to_toy_loop():
+    """Drive the toy VI loop and the model-scale optimizer on the SAME
+    oracle sequence (K=1, no compression, X_1 = 0 — where the toy's
+    origin-anchored recursion and the optimizer's X_1-anchored recursion
+    coincide): iterates AND the adaptive gamma sequence must be
+    bit-identical."""
+    d, T, scale = 64, 12, 0.37
+    x0 = jnp.zeros((d,), jnp.float32)
+
+    # elementwise oracle (no reductions -> bit-stable under the toy's vmap)
+    def oracle(z, k):
+        return 0.8 * z + 0.3 * jax.random.normal(k, z.shape, jnp.float32)
+
+    toy_cfg = eg.QGenXConfig(variant="de", num_workers=1, gamma_scale=scale)
+    toy = eg.qgenx_init(x0, toy_cfg)
+
+    opt_cfg = opt.OptimizerConfig(name="qgenx", gamma_scale=scale,
+                                  grad_clip=0.0)
+    params = {"w": x0}
+    st = opt.init_state(opt_cfg, params)
+    assert isinstance(st, qgenx_opt.QGenXOptState)
+
+    keys = jax.random.split(KEY, T)
+    for t in range(T):
+        toy = eg.qgenx_step(toy, oracle, keys[t], toy_cfg)
+
+        # replicate the toy's exact key discipline (5-way split, per-worker
+        # oracle keys) so both sides see the same oracle draws
+        _, _, k_o1, k_o2, _ = jax.random.split(keys[t], 5)
+        v1 = oracle(params["w"], jax.random.split(k_o1, 1)[0])
+        half = qgenx_opt.extrapolate(opt_cfg, params, st, {"w": v1}, 1)
+        v2 = oracle(half["w"], jax.random.split(k_o2, 1)[0])
+        sq = qgenx_opt.local_sq_diff({"w": v1}, {"w": v2})
+        params, st = qgenx_opt.commit(opt_cfg, params, st, {"w": v2}, sq, 1)
+
+        np.testing.assert_array_equal(np.asarray(params["w"]),
+                                      np.asarray(toy.x)), t
+        np.testing.assert_array_equal(np.asarray(st.sum_sq),
+                                      np.asarray(toy.sum_sq))
+        # same sufficient statistic + same function = same gamma, bitwise
+        np.testing.assert_array_equal(
+            np.asarray(eg.adaptive_gamma(st.sum_sq, 1, scale)),
+            np.asarray(eg.adaptive_gamma(toy.sum_sq, 1, scale)),
+        )
+
+
+def test_qgenx_state_shapes_and_anchor_copy():
+    params = {"a": jnp.ones((8,), jnp.float32), "b": jnp.zeros((2, 3))}
+    cfg = opt.OptimizerConfig(name="qgenx")
+    st = opt.init_state(cfg, params)
+    assert jax.tree_util.tree_structure(st.y) == jax.tree_util.tree_structure(params)
+    assert float(st.sum_sq) == 0.0 and int(st.count) == 0
+    # the anchor is a fresh buffer (donation-safe), not an alias of params
+    assert st.anchor["a"] is not params["a"]
+    np.testing.assert_array_equal(np.asarray(st.anchor["a"]),
+                                  np.asarray(params["a"]))
+
+
+# ---------------------------------------------------------------------------
+# qgenx through make_train_step
+# ---------------------------------------------------------------------------
+
+
+def test_qgenx_trains_via_make_train_step():
+    """Acceptance: --optimizer qgenx runs through the production train
+    step and reduces the loss (1 device, no exchange)."""
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt.OptimizerConfig(name="qgenx", gamma_scale=0.02)
+    state = opt.init_state(opt_cfg, params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    from repro.core.exchange import null_exchange_state
+
+    ex_state = null_exchange_state()
+    batch = _batch(jax.random.PRNGKey(1))
+    losses = []
+    for t in range(6):
+        params, state, ex_state, metrics = step(
+            params, state, ex_state, batch, jax.random.fold_in(KEY, t)
+        )
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert float(state.sum_sq) > 0.0  # the adaptive statistic accumulated
+    assert int(state.count) == 6
+    assert float(metrics["param_drift"]) == 0.0  # no exchange, no regime
+
+
+def test_qgenx_trains_with_compressed_exchange_1dev():
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt.OptimizerConfig(name="qgenx", gamma_scale=0.02)
+    state = opt.init_state(opt_cfg, params)
+    ex = make_exchange(ExchangeConfig(
+        compressor="qgenx",
+        quant=QuantConfig(num_levels=15, bucket_size=256),
+        mode="gather", axis_name="data",
+    ))
+    mesh = _one_dev_mesh()
+    step = jax.jit(make_train_step(model, opt_cfg, exchange=ex, mesh=mesh))
+    ex_state = ex.init_state()
+    batch = _batch(jax.random.PRNGKey(1))
+    losses = []
+    with mesh:
+        for t in range(5):
+            params, state, ex_state, metrics = step(
+                params, state, ex_state, batch, jax.random.fold_in(KEY, t)
+            )
+            losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert int(ex_state.step) == 10  # 2 exchanges per extragradient step
+    n = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    assert float(metrics["wire_bytes"]) == 2 * ex.wire_bytes(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# sync_every: gating, parity at K=1, wire accounting, drift
+# ---------------------------------------------------------------------------
+
+
+def test_sync_every_validation():
+    with pytest.raises(ValueError):
+        ExchangeConfig(sync_every=0)
+    with pytest.raises(ValueError):
+        ExchangeConfig(drift_probe=0)
+
+
+def _quant8():
+    return QuantConfig(num_levels=15, bucket_size=256)
+
+
+def _run_steps(ex_cfg, n_steps, opt_name="extra_adam"):
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt.OptimizerConfig(name=opt_name, lr=1e-3, gamma_scale=0.02)
+    state = opt.init_state(opt_cfg, params)
+    ex = make_exchange(ex_cfg)
+    mesh = _one_dev_mesh()
+    step = jax.jit(make_train_step(model, opt_cfg, exchange=ex, mesh=mesh))
+    ex_state = ex.init_state()
+    batch = _batch(jax.random.PRNGKey(1))
+    out = []
+    with mesh:
+        for t in range(n_steps):
+            params, state, ex_state, metrics = step(
+                params, state, ex_state, batch, jax.random.fold_in(KEY, t)
+            )
+            out.append((params, {k: float(v) for k, v in metrics.items()}))
+    return out, ex, ex_state
+
+
+def test_sync_every_1_reproduces_pr2_path():
+    """The regression the satellite asks for: a config with sync_every=1
+    must train byte-identically (params AND wire_bytes) to the PR 2
+    construction that predates the field."""
+    base = ExchangeConfig(compressor="qgenx", quant=_quant8(),
+                          mode="gather", axis_name="data")
+    sync1 = dataclasses.replace(base, sync_every=1)
+    out_a, _, _ = _run_steps(base, 2)
+    out_b, _, _ = _run_steps(sync1, 2)
+    for (pa, ma), (pb, mb) in zip(out_a, out_b):
+        assert ma == mb
+        for la, lb in zip(jax.tree_util.tree_leaves(pa),
+                          jax.tree_util.tree_leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_sync_every_1_has_no_cond_in_jaxpr():
+    """Trace-level evidence: the gate only exists when K>1 (sync_every=1
+    pays zero overhead), and DOES exist when K>1."""
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt.OptimizerConfig(name="extra_adam", lr=1e-3)
+    state = opt.init_state(opt_cfg, params)
+    mesh = _one_dev_mesh()
+    batch = _batch(jax.random.PRNGKey(1))
+    jaxprs = {}
+    for k in (1, 3):
+        cfg = ExchangeConfig(compressor="qgenx", quant=_quant8(),
+                             mode="gather", axis_name="data", sync_every=k)
+        ex = make_exchange(cfg)
+        step = make_train_step(model, opt_cfg, exchange=ex, mesh=mesh)
+        jaxprs[k] = str(jax.make_jaxpr(step)(
+            params, state, ex.init_state(), batch, KEY
+        ))
+    assert " cond" not in jaxprs[1]
+    assert " cond" in jaxprs[3]
+
+
+def test_sync_every_wire_only_on_sync_steps_and_recorder_agrees():
+    """1-device version of the 8-dev payload: wire_bytes = 0 off sync
+    steps; on the sync step it equals 2 grad exchanges + the drift probe,
+    and the trace-time recorder sees exactly those operands."""
+    cfg = ExchangeConfig(compressor="qgenx", quant=_quant8(),
+                         mode="gather", axis_name="data", sync_every=3)
+    exchange_mod.wire_trace_start()
+    out, ex, ex_state = _run_steps(cfg, 4)
+    rec = exchange_mod.wire_trace_stop()
+
+    n = sum(l.size for l in jax.tree_util.tree_leaves(out[0][0]))
+    per_call = ex.wire_bytes(n, 1)
+    probe = 4.0 * min(cfg.drift_probe, n)
+    want_sync = 2 * per_call + probe
+
+    wires = [m["wire_bytes"] for _, m in out]
+    drifts = [m["param_drift"] for _, m in out]
+    assert wires[0] == wires[1] == wires[3] == 0.0, wires
+    assert wires[2] == want_sync, (wires, want_sync)
+    # one trace; the sync branch's operands recorded exactly once
+    assert sum(b for _, b in rec) == want_sync, rec
+    assert any(name == "drift_probe" for name, _ in rec)
+    # 1 device: the local params ARE the mean — drift identically zero
+    assert drifts == [0.0] * 4, drifts
+    # exchange state advanced only on the sync step (2 pmean calls)
+    assert int(ex_state.step) == 2
+
+
+def test_sync_every_reduces_total_wire_by_k():
+    """~K× reduction over a window of K steps (one sync step per window)."""
+    base = ExchangeConfig(compressor="qgenx", quant=_quant8(),
+                          mode="gather", axis_name="data")
+    k4 = dataclasses.replace(base, sync_every=4)
+    out_1, _, _ = _run_steps(base, 4)
+    out_4, _, _ = _run_steps(k4, 4)
+    tot_1 = sum(m["wire_bytes"] for _, m in out_1)
+    tot_4 = sum(m["wire_bytes"] for _, m in out_4)
+    assert tot_4 > 0
+    ratio = tot_1 / tot_4
+    assert 3.0 < ratio <= 4.0, ratio  # probe bytes keep it just under 4x

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Markdown link/path checker for the CI docs job (stdlib only).
+
+Checks, for each markdown file given on the command line:
+
+* every inline link ``[text](target)`` whose target is not an external
+  URL (``http://``, ``https://``, ``mailto:``) resolves to an existing
+  file or directory, relative to the markdown file (``#anchors`` are
+  stripped; a bare ``#anchor`` is accepted);
+* every backtick-quoted repo path that LOOKS like a file reference
+  (starts with a known top-level directory such as ``src/`` or
+  ``tests/`` and contains no spaces or placeholders) exists — this is
+  what keeps the README's repo map honest.
+
+Exit code 0 = all good; 1 = broken references (each printed).
+
+Usage: python tools/check_md_links.py README.md DESIGN.md ROADMAP.md
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+)`")
+# top-level dirs whose backticked mentions must exist on disk
+PATH_PREFIXES = ("src/", "tests/", "examples/", "benchmarks/", "tools/",
+                 "experiments/")
+EXTERNAL = ("http://", "https://", "mailto:")
+PLACEHOLDER = ("*", "<", "...", "_<")
+
+
+def check_file(md_path: str) -> list:
+    base = os.path.dirname(os.path.abspath(md_path))
+    text = open(md_path, encoding="utf-8").read()
+    errors = []
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(EXTERNAL):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:  # same-file anchor
+            continue
+        if not os.path.exists(os.path.join(base, path)):
+            errors.append(f"{md_path}: broken link -> {target}")
+
+    for m in CODE_PATH_RE.finditer(text):
+        ref = m.group(1)
+        if not ref.startswith(PATH_PREFIXES):
+            continue
+        if any(p in ref for p in PLACEHOLDER):
+            continue
+        # `src/repro/kernels/` style directory refs are fine too
+        if not os.path.exists(os.path.join(base, ref)):
+            errors.append(f"{md_path}: stale path reference -> `{ref}`")
+
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_md_links.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for md in argv:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e)
+    n_files = len(argv)
+    if errors:
+        print(f"FAIL: {len(errors)} broken reference(s) in {n_files} file(s)")
+        return 1
+    print(f"OK: {n_files} markdown file(s), all links and paths resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
