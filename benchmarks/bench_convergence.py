@@ -7,10 +7,15 @@ Emits the measured restricted-gap decay across T for:
   * Q-GenX vs QSGDA on the bilinear problem (Fig. 4)
   * quantized (UQ8/UQ4) vs full-precision Q-GenX (rate preservation +
     bits-per-iteration savings)
+  * de vs optda at EQUAL ORACLE BUDGET (method engine, core/methods.py):
+    the one-call optimistic schedule takes 2x the iterations for the
+    same oracle/wire spend — toy VI loop and model-scale trainer rows
   * MODEL SCALE: the qgenx optimizer (adaptive gamma rule through
     make_train_step) vs extra_adam/adam on a reduced LM, and the
     sync_every local-update wire/quality trade-off (K in {1, 4, 16},
     8 forced host devices, subprocess)
+  * drift vs wire across compressed parameter re-centering cadences
+    (recenter_every in {0, 8, 4} on top of sync_every=4, 8 host devices)
 """
 
 import math
@@ -137,9 +142,31 @@ def run():
     )
     emit("exchange_registry_rate_preservation", 0.0, derived)
 
+    # --- de vs optda at equal oracle budget (toy VI loop) ----------------
+    # de spends 2 oracle calls + 2 broadcasts per iteration, optda 1+1:
+    # at an equal call budget optda runs 2x the iterations for the same
+    # bits_sent — the Example 3.3 oracle-efficiency claim
+    vi = bilinear_saddle(d=32, seed=8)
+    oracle = absolute_noise_oracle(vi, sigma=0.5)
+    x0 = jnp.asarray(vi.z_star, jnp.float32) + 1.0
+    quant = QuantConfig(num_levels=15, bits=8, bucket_size=64,
+                        q_norm=math.inf)
+    budget = 2 * 1024  # oracle calls per worker
+    rows = {}
+    for method, iters in (("de", budget // 2), ("optda", budget)):
+        cfgm = QGenXConfig(variant=method, num_workers=4, quant=quant)
+        st = qgenx_run(x0, oracle, cfgm, KEY, iters)
+        rows[method] = (iters, restricted_gap(vi, st.x_avg),
+                        float(st.bits_sent))
+    emit("de_vs_optda_equal_oracle_budget", 0.0,
+         ";".join(f"{m}_T={t};{m}_gap={g:.4f};{m}_bits={b:.3e}"
+                  for m, (t, g, b) in rows.items()))
+
     # --- model scale: the paper's optimizer vs the adam family ----------
     _model_scale_qgenx_vs_extra_adam()
+    _model_scale_de_vs_optda()
     _sync_every_tradeoff()
+    _recenter_tradeoff()
 
 
 def _model_scale_qgenx_vs_extra_adam(steps: int = 12):
@@ -177,6 +204,43 @@ def _model_scale_qgenx_vs_extra_adam(steps: int = 12):
          ";".join(f"{k}_loss={v:.4f}" for k, v in results.items()))
 
 
+def _model_scale_de_vs_optda(oracle_budget: int = 16):
+    """Equal oracle budget on the reduced LM through make_train_step:
+    de takes budget/2 steps (2 grads each), optda budget steps (1 grad
+    each) — same number of forward+backward passes and broadcast rounds,
+    the optimistic schedule gets 2x the parameter updates."""
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.core.exchange import null_exchange_state
+    from repro.launch.steps import make_train_step
+    from repro.models.model import build
+    from repro.optim import optimizers as opt
+
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              dtype="float32")
+    model = build(cfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 256)
+    batch = {"tokens": toks, "labels": toks}
+    results = {}
+    t0 = time.perf_counter()
+    for method, steps in (("de", oracle_budget // 2), ("optda", oracle_budget)):
+        ocfg = opt.OptimizerConfig(name="qgenx", method=method,
+                                   gamma_scale=0.02)
+        step = jax.jit(make_train_step(model, ocfg))
+        params, st, ex_st = params0, opt.init_state(ocfg, params0), \
+            null_exchange_state()
+        for t in range(steps):
+            params, st, ex_st, m = step(params, st, ex_st, batch,
+                                        jax.random.fold_in(KEY, t))
+        results[method] = (steps, float(m["loss"]))
+    us = (time.perf_counter() - t0) * 1e6 / (2 * oracle_budget)
+    emit("model_scale_de_vs_optda_equal_oracle", us,
+         ";".join(f"{m}_steps={s};{m}_loss={l:.4f}"
+                  for m, (s, l) in results.items()))
+
+
 def _sync_every_tradeoff(steps: int = 16):
     """Wire/quality trade-off of the local-update regime: total measured
     wire_bytes (the metric == trace recorder, see tests) and final loss
@@ -212,6 +276,42 @@ def _sync_every_tradeoff(steps: int = 16):
         base = rows[0][1]
         emit("sync_every_wire_reduction", 0.0,
              ";".join(f"K{s}={base / w:.2f}x" for s, w, _ in rows if w))
+
+
+def _recenter_tradeoff(steps: int = 16):
+    """Drift vs wire across compressed parameter re-centering cadences:
+    sync_every=4 with recenter_every in {0, 8, 4} (8 forced host devices,
+    subprocess) — total wire_bytes, final loss, and the drift reported on
+    the last sync step."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    pp = os.environ.get("PYTHONPATH")
+    env = {**os.environ, "PYTHONPATH": src + os.pathsep + pp if pp else src}
+    for rc in (0, 8, 4):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train",
+             "--arch", "tinyllama-1.1b", "--reduced", "--host-devices", "8",
+             "--steps", str(steps), "--batch", "16", "--seq", "32",
+             "--repeat-batch", "--optimizer", "qgenx", "--method", "optda",
+             "--gamma-scale", "0.02", "--compression", "int8",
+             "--compress-axis", "data", "--sync-every", "4",
+             "--recenter-every", str(rc)],
+            cwd=root, env=env, capture_output=True, text=True, timeout=900,
+        )
+        if r.returncode != 0:
+            emit(f"recenter_every{rc}_drift_wire", 0.0,
+                 "ERROR=" + r.stderr[-160:].replace("\n", " "))
+            continue
+        lines = [l for l in r.stdout.splitlines()
+                 if l.startswith("[train] step=")]
+        wire = sum(float(l.split("wire=")[1].split("B")[0]) for l in lines)
+        drifts = [float(l.split("drift=")[1].split()[0])
+                  for l in lines if "drift=" in l]
+        last_drift = next((d for d in reversed(drifts) if d > 0.0), 0.0)
+        loss = float(r.stdout.split("final_loss=")[1].split()[0])
+        emit(f"recenter_every{rc}_drift_wire", 0.0,
+             f"total_wire={wire:.3e}B;last_sync_drift={last_drift:.3e};"
+             f"final_loss={loss:.4f}")
 
 
 if __name__ == "__main__":

@@ -188,6 +188,28 @@ def run():
         emit(f"wire_bytes_sync_every{sync}_uq8_two_phase_K16", 0.0,
              f"bytes_per_step={per_step:.3e};reduction={base / per_step:.2f}x")
 
+    # method engine (core/methods.py): broadcast rounds per optimizer step
+    # scale the amortized wire — optda's one-call schedule halves the de
+    # gradient traffic at equal steps (the oracle-efficiency headline)
+    from repro.core.methods import METHODS
+
+    per_ex = ex.wire_bytes(n, 16)
+    for mname in ("de", "optda"):
+        m = METHODS[mname]
+        emit(f"wire_bytes_method_{mname}_uq8_two_phase_K16", 0.0,
+             f"bytes_per_step={m.exchanges * per_ex:.3e};"
+             f"oracle_calls={m.oracle_calls};exchanges={m.exchanges}")
+
+    # compressed parameter re-centering (ExchangeConfig.recenter_every):
+    # one extra params-shaped exchange every R steps on top of the
+    # sync_every=4 regime — amortized drift-for-wire price
+    sync_step = base + probe_bytes  # 2 grad exchanges + probe, every 4th
+    for rc in (0, 16, 4):
+        per_step = (sync_step / 4) + (per_ex / rc if rc else 0.0)
+        emit(f"wire_bytes_recenter_every{rc}_sync4_uq8_two_phase_K16", 0.0,
+             f"bytes_per_step={per_step:.3e};"
+             f"recenter_overhead={(per_ex / rc if rc else 0.0):.3e}")
+
 
 if __name__ == "__main__":
     run()

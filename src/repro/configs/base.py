@@ -86,6 +86,12 @@ class ModelConfig:
     tie_embeddings: bool = True
     dtype: str = "bfloat16"
     remat: bool = False  # activation checkpointing on the layer scan body
+    unroll_scan: bool = False  # unroll the layer scan into a Python loop:
+    # required inside a PARTIALLY-manual shard_map (auto= subset), where
+    # XLA's SPMD partitioner on jaxlib 0.4.36 cannot partition while-loop
+    # bodies carrying auto-subgroup shardings (fatal IsManualSubgroup
+    # check) — the multi-pod qgenx dryrun sets this (with blockwise_attn
+    # off) to get a scan-free lowering
     blockwise_attn: bool = False  # flash-style online-softmax attention for
     # long sequences (beyond-paper perf feature; see EXPERIMENTS.md §Perf)
     onehot_embed: bool = False  # one-hot matmul embedding (gather-free;

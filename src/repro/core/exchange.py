@@ -206,6 +206,93 @@ def wire_bytes_per_device(
 
 
 # ---------------------------------------------------------------------------
+# Gather-free level-table primitives (partial-manual-mesh safe)
+# ---------------------------------------------------------------------------
+
+
+def _select_gather(table: Array, idx: Array) -> Array:
+    """``table[idx]`` without a gather op: unrolled selects over the
+    (small, static) level table.  Bit-identical values; used on the
+    partially-manual production mesh, where XLA's SPMD partitioner cannot
+    lower dynamic gathers (same lowering limit that forces
+    ``ModelConfig.unroll_scan`` and ``onehot_embed`` there)."""
+    out = jnp.full(idx.shape, table[0], table.dtype)
+    for j in range(1, table.shape[0]):
+        out = jnp.where(idx == j, table[j], out)
+    return out
+
+
+def _bracket_select(u: Array, levels: Array):
+    """(tau, lo, hi, xi) for normalized magnitudes ``u`` in [0, 1]: the
+    bracket index (compare-accumulate over the static interior levels —
+    equal to ``clip(searchsorted(levels, u, 'right') - 1, 0, s)``), its
+    endpoints, and the fractional position.  THE single definition of
+    the Definition-1 bracket used by both the leafwise rounding
+    (:func:`_round_indices_select`) and its expectation
+    (:func:`expected_index_pmf`) — the two cannot drift apart."""
+    s2 = levels.shape[0]
+    tau = jnp.zeros(u.shape, jnp.int32)
+    for j in range(1, s2 - 1):
+        tau += (u >= levels[j]).astype(jnp.int32)
+    lo = _select_gather(levels, tau)
+    hi = _select_gather(levels, tau + 1)
+    return tau, lo, hi, (u - lo) / (hi - lo)
+
+
+# ---------------------------------------------------------------------------
+# Entropy-coded wire estimate (Theorem 2) — traced twin of core/coding.py
+# ---------------------------------------------------------------------------
+
+
+def expected_index_pmf(u: Array, levels: Array) -> Array:
+    """Expected |level-index| distribution under unbiased stochastic
+    rounding (Definition 1) of normalized magnitudes ``u`` in [0, 1].
+
+    A coordinate whose magnitude falls in the bracket [l_tau, l_tau+1)
+    rounds up with probability xi = (u - l_tau)/(l_tau+1 - l_tau), so it
+    contributes mass (1-xi) to symbol tau and xi to tau+1 — no PRNG draw
+    needed for the expectation.  Returns a [num_symbols] f32 pmf.
+
+    Built from per-symbol masked reductions (the symbol count is static
+    and small) rather than a scatter-add: this runs inside the train
+    step's shard_map, and XLA's SPMD partitioner cannot lower scatter
+    under a partially-manual mesh (the same class of lowering limit that
+    forces ``ModelConfig.unroll_scan`` there).
+    """
+    lv = levels.astype(jnp.float32)
+    num_symbols = lv.shape[0]
+    u = u.reshape(-1)
+    tau, _, _, xi = _bracket_select(u, lv)
+    xi = jnp.clip(xi, 0.0, 1.0)
+    down, up = 1.0 - xi, xi
+    pmf = jnp.stack([
+        jnp.sum(jnp.where(tau == j, down, 0.0))
+        + jnp.sum(jnp.where(tau + 1 == j, up, 0.0))
+        for j in range(num_symbols)
+    ])
+    return pmf / u.shape[0]
+
+
+def theorem2_bits_traced(pmf: Array, d, num_buckets) -> Array:
+    """Theorem 2 expected CODE o Q bits, as a traced scalar.
+
+    The same formula as :func:`repro.core.coding.theorem2_expected_bits`
+    (the host-side numpy oracle — parity-tested):
+
+        C_b * num_buckets + (1 - p0) * d + (H(L) + 1) * d
+
+    i.e. one f32 norm per bucket, a sign bit per expected nonzero, and an
+    entropy-optimal prefix code (within 1 bit of H) per index.
+    """
+    from repro.core.coding import C_B  # numpy-free constant (32)
+
+    nz = pmf > 0
+    h = -jnp.sum(jnp.where(nz, pmf * jnp.log2(jnp.where(nz, pmf, 1.0)), 0.0))
+    d = jnp.float32(d)
+    return C_B * jnp.float32(num_buckets) + (1.0 - pmf[0]) * d + (h + 1.0) * d
+
+
+# ---------------------------------------------------------------------------
 # Quantize / dequantize dispatch (Pallas kernels vs jnp reference)
 # ---------------------------------------------------------------------------
 
@@ -268,9 +355,23 @@ def _dequantize_2d(
     return dequantize_blocks_ref(payload2d, norms, levels, bits=cfg.bits)
 
 
-def _axis_key(key: Array, axis_name) -> Array:
-    """Per-device independent key (independent quantization noise)."""
-    return jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+def _axis_key(key: Array, axis_name, axis_index=None) -> Array:
+    """Per-device independent key (independent quantization noise).
+
+    ``axis_index=None`` derives the device's position from
+    ``lax.axis_index`` — correct under a fully-manual shard_map, but the
+    lowering emits a ``partition-id`` instruction that XLA's SPMD
+    partitioner rejects when OTHER mesh axes stay automatic (the
+    partially-manual ``auto=`` production mesh: "PartitionId instruction
+    is not supported for SPMD partitioning").  Callers on that path pass
+    the index explicitly instead — a [1] slice of an ``arange`` sharded
+    over the exchange axis (see ``make_train_step``) — which folds in the
+    SAME integer value, so the derived keys (and every downstream byte)
+    are identical to the axis_index path.
+    """
+    if axis_index is None:
+        axis_index = jax.lax.axis_index(axis_name)
+    return jax.random.fold_in(key, axis_index)
 
 
 # ---------------------------------------------------------------------------
@@ -288,15 +389,18 @@ def _qgenx_pmean(
     use_pallas: bool = False,
     use_device_prng: bool = False,
     interpret: bool = True,
+    axis_index=None,
 ) -> Array:
     """Unbiased quantized mean-reduction of a flat vector over ``axis_name``.
 
     Must be called inside shard_map with ``axis_name`` in scope. ``x`` is
     each device's local full vector (e.g. its data-parallel gradient).
     ``interpret=False`` compiles the Pallas kernels (real TPU); the default
-    interpret mode is for this CPU container.
+    interpret mode is for this CPU container.  ``axis_index`` (optional)
+    supplies the device's position on partially-manual meshes where
+    ``lax.axis_index`` cannot lower (see :func:`_axis_key`).
     """
-    key = _axis_key(key, axis_name)
+    key = _axis_key(key, axis_name, axis_index)
     k1, k2 = jax.random.split(key)
     n = x.shape[0]
     # psum of a Python literal is evaluated at trace time -> static size
@@ -388,12 +492,28 @@ def _qgenx_pmean(
     raise ValueError(f"unknown mode {mode!r}")
 
 
+def _round_indices_select(u: Array, levels: Array, key: Array,
+                          stochastic: bool) -> Array:
+    """Gather-free twin of ``quantization._stochastic_round_indices``:
+    bracket via :func:`_bracket_select` — same noise draw, bit-identical
+    indices."""
+    tau, _, _, xi = _bracket_select(u, levels)
+    if stochastic:
+        r = jax.random.uniform(key, u.shape, dtype=u.dtype)
+        up = (r < xi).astype(jnp.int32)
+    else:
+        up = (xi >= 0.5).astype(jnp.int32)
+    return tau + up
+
+
 def _qgenx_pmean_leafwise(
     tree,
     axis_name,
     levels: Array,
     key: Array,
     cfg: Optional[QuantConfig],
+    axis_index=None,
+    allreduce_fallback: bool = False,
 ):
     """Quantized pmean that PRESERVES inner (auto-axis) shardings.
 
@@ -412,10 +532,8 @@ def _qgenx_pmean_leafwise(
     """
     if cfg is None:
         return jax.lax.pmean(tree, axis_name)
-    from repro.core.quantization import _stochastic_round_indices
-
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(_axis_key(key, axis_name), len(leaves))
+    keys = jax.random.split(_axis_key(key, axis_name, axis_index), len(leaves))
     out = []
     lv = levels.astype(jnp.float32)
     for g, k in zip(leaves, keys):
@@ -426,8 +544,24 @@ def _qgenx_pmean_leafwise(
             norms = jnp.sqrt(jnp.sum(gf * gf, axis=-1, keepdims=True))
         safe = jnp.where(norms > 0, norms, 1.0)
         u = jnp.clip(jnp.abs(gf) / safe, 0.0, 1.0)
-        idx = _stochastic_round_indices(u, lv, k, cfg.stochastic)
+        # gather-free rounding/dequant lookups: this is the exchange the
+        # partially-manual production mesh runs (bit-identical to the
+        # quantization-module oracle; see _round_indices_select)
+        idx = _round_indices_select(u, lv, k, cfg.stochastic)
         signed = jnp.where(gf < 0, -idx, idx)
+        if allreduce_fallback:
+            # partially-manual meshes lower ONLY all-reduce (see
+            # ExchangeConfig.allreduce_fallback): dequantize the OWN
+            # payload locally — identical rounding noise, identical
+            # unbiased mean — and psum the f32 estimate.  The f32 operand
+            # IS the wire payload here; record it as such.
+            hat = (_select_gather(lv, jnp.abs(signed))
+                   * jnp.sign(gf) * norms)
+            _record_wire("leaf_fallback", hat)
+            axis_size = jax.lax.psum(1, axis_name)
+            out.append((jax.lax.psum(hat, axis_name) / axis_size)
+                       .astype(g.dtype))
+            continue
         # the only cross-device traffic: int8/int4 payload + f32 row norms
         # (packing reuses the kernels' wire-format helpers — one layout)
         d = g.shape[-1]
@@ -449,7 +583,8 @@ def _qgenx_pmean_leafwise(
         else:
             all_idx = all_p.astype(jnp.int32)
         mag = jnp.abs(all_idx)
-        vals = lv[mag] * jnp.sign(all_idx.astype(jnp.float32)) * all_norms
+        vals = (_select_gather(lv, mag)
+                * jnp.sign(all_idx.astype(jnp.float32)) * all_norms)
         out.append(jnp.mean(vals, axis=0).astype(g.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -506,6 +641,27 @@ class ExchangeConfig:
         a ``param_drift`` metric from a small f32 probe of the params.
       drift_probe: number of leading parameter coordinates in the drift
         probe (the only extra wire traffic a sync step pays; counted).
+      allreduce_fallback: leafwise mode only — exchange the locally
+        DEQUANTIZED per-worker estimate via one f32 ``psum`` instead of
+        all-gathering the int payloads.  Same quantization noise, same
+        unbiased mean (Definition 1 variance unchanged); needed on the
+        PARTIALLY-manual production mesh, where XLA's SPMD partitioner on
+        jaxlib 0.4.36 lowers ONLY all-reduce collectives (all-gather /
+        ppermute / all-to-all all hit fatal IsManualSubgroup checks — the
+        multi-pod dryrun sets this).  Wire accounting is honest about the
+        cost: the psum operand is f32, so ``wire_bytes`` reports 4 B per
+        coordinate, not the packed payload — on real-TPU jax versions
+        whose partitioner lowers all-gather, leave this off and keep the
+        compressed wire format.
+      recenter_every: compressed parameter re-centering cadence (local
+        updates trade drift for wire).  0 (default) = never; R>0 = every
+        R-th optimizer step the train step re-centers the drifted
+        iterates through THIS exchange's compressor (one extra
+        ``pmean_tree`` of a params-shaped pytree — for the ``qgenx``
+        optimizer the dual accumulator Y is exchanged and the params
+        recomputed, for the adam family the params themselves), gated
+        behind ``lax.cond`` exactly like the sync gate.  Wire bytes are
+        counted by the same recorder/metric as every other exchange.
     """
 
     compressor: str = "qgenx"
@@ -525,6 +681,8 @@ class ExchangeConfig:
     layerwise_threshold: int = 65536
     sync_every: int = 1
     drift_probe: int = 4096
+    recenter_every: int = 0
+    allreduce_fallback: bool = False
 
     def __post_init__(self):
         if self.mode not in ("gather", "two_phase", "leafwise"):
@@ -539,6 +697,17 @@ class ExchangeConfig:
             raise ValueError(f"sync_every must be >= 1, got {self.sync_every}")
         if self.drift_probe < 1:
             raise ValueError(f"drift_probe must be >= 1, got {self.drift_probe}")
+        if self.recenter_every < 0:
+            raise ValueError(
+                f"recenter_every must be >= 0, got {self.recenter_every}"
+            )
+        if self.allreduce_fallback and self.mode != "leafwise":
+            raise ValueError(
+                "allreduce_fallback is a leafwise-exchange escape hatch; "
+                f"mode={self.mode!r} would still all-gather/all-to-all and "
+                "hit the partial-manual partitioner abort — use "
+                "mode='leafwise'"
+            )
 
 
 @jax.tree_util.register_pytree_node_class
@@ -664,14 +833,16 @@ class Compressor:
         lv = jnp.asarray([0.0, 1.0], jnp.float32)
         return lv, lv
 
-    def pmean(self, x, cfg: ExchangeConfig, state: ExchangeState, key):
+    def pmean(self, x, cfg: ExchangeConfig, state: ExchangeState, key,
+              axis_index=None):
         raise NotImplementedError
 
-    def pmean_tree(self, tree, cfg: ExchangeConfig, state: ExchangeState, key):
+    def pmean_tree(self, tree, cfg: ExchangeConfig, state: ExchangeState, key,
+                   axis_index=None):
         """Default: bucket-fuse all leaves into one flat vector."""
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-        out = self.pmean(flat, cfg, state, key)
+        out = self.pmean(flat, cfg, state, key, axis_index)
         return jax.tree_util.tree_unflatten(treedef, _split_like(out, leaves))
 
     def compress(self, v, cfg: ExchangeConfig, levels, key):
@@ -740,10 +911,10 @@ class NoneCompressor(Compressor):
 
     name = "none"
 
-    def pmean(self, x, cfg, state, key):
+    def pmean(self, x, cfg, state, key, axis_index=None):
         return jax.lax.pmean(x, cfg.axis_name)
 
-    def pmean_tree(self, tree, cfg, state, key):
+    def pmean_tree(self, tree, cfg, state, key, axis_index=None):
         return jax.lax.pmean(tree, cfg.axis_name)
 
     def compress(self, v, cfg, levels, key):
@@ -782,20 +953,23 @@ class QgenxCompressor(Compressor):
         lv = uniform_levels(self._quant(cfg).num_levels)
         return lv, lv
 
-    def pmean(self, x, cfg, state, key):
+    def pmean(self, x, cfg, state, key, axis_index=None):
         if cfg.mode == "leafwise":
             raise ValueError("mode='leafwise' is a tree exchange; use pmean_tree")
         return _qgenx_pmean(
             x, cfg.axis_name, state.levels, key, self._quant(cfg), cfg.mode,
             cfg.use_pallas, cfg.use_device_prng, cfg.interpret,
+            axis_index=axis_index,
         )
 
-    def pmean_tree(self, tree, cfg, state, key):
+    def pmean_tree(self, tree, cfg, state, key, axis_index=None):
         if cfg.mode == "leafwise":
             return _qgenx_pmean_leafwise(
-                tree, cfg.axis_name, state.levels, key, self._quant(cfg)
+                tree, cfg.axis_name, state.levels, key, self._quant(cfg),
+                axis_index=axis_index,
+                allreduce_fallback=cfg.allreduce_fallback,
             )
-        return super().pmean_tree(tree, cfg, state, key)
+        return super().pmean_tree(tree, cfg, state, key, axis_index)
 
     def compress(self, v, cfg, levels, key):
         return quantize_dequantize(v, levels, key, self._quant(cfg)).reshape(v.shape)
@@ -807,6 +981,8 @@ class QgenxCompressor(Compressor):
 
     def wire_bytes(self, n, axis_size, cfg):
         if cfg.mode == "leafwise":
+            if cfg.allreduce_fallback:
+                return 4.0 * n  # the f32 psum operand IS the payload
             sizes = leafwise_buffer_bytes((n,), self._quant(cfg))
         else:
             sizes = exchange_buffer_bytes(n, axis_size, self._quant(cfg), cfg.mode)
@@ -814,6 +990,8 @@ class QgenxCompressor(Compressor):
 
     def wire_bytes_tree(self, shapes, axis_size, cfg):
         if cfg.mode == "leafwise":
+            if cfg.allreduce_fallback:
+                return float(sum(4.0 * _size_of(s) for s in shapes))
             return float(sum(
                 sum(leafwise_buffer_bytes(
                     s.shape if hasattr(s, "shape") else s, self._quant(cfg)
@@ -842,10 +1020,10 @@ class RandKCompressor(Compressor):
     def _support(self, n, k, key):
         return jax.random.permutation(key, n)[:k]
 
-    def pmean(self, x, cfg, state, key):
+    def pmean(self, x, cfg, state, key, axis_index=None):
         n = x.shape[0]
         k = _randk_k(n, cfg)
-        key = _axis_key(key, cfg.axis_name)
+        key = _axis_key(key, cfg.axis_name, axis_index)
         axis_size = jax.lax.psum(1, cfg.axis_name)
         idx = self._support(n, k, key).astype(jnp.int32)
         vals = x[idx] * (n / k)
@@ -896,7 +1074,7 @@ class LayerwiseCompressor(Compressor):
         small = [i for i, l in enumerate(leaves) if l.size <= cfg.layerwise_threshold]
         return big, small
 
-    def pmean(self, x, cfg, state, key):
+    def pmean(self, x, cfg, state, key, axis_index=None):
         self.validate(cfg)
         lo, hi = self._cfgs(cfg)
         big = x.shape[0] > cfg.layerwise_threshold
@@ -905,9 +1083,10 @@ class LayerwiseCompressor(Compressor):
         return _qgenx_pmean(
             x, cfg.axis_name, levels, key, qcfg, cfg.mode,
             cfg.use_pallas, cfg.use_device_prng, cfg.interpret,
+            axis_index=axis_index,
         )
 
-    def pmean_tree(self, tree, cfg, state, key):
+    def pmean_tree(self, tree, cfg, state, key, axis_index=None):
         self.validate(cfg)
         lo, hi = self._cfgs(cfg)
         leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -926,6 +1105,7 @@ class LayerwiseCompressor(Compressor):
             mean = _qgenx_pmean(
                 flat, cfg.axis_name, levels, jax.random.fold_in(key, gid),
                 qcfg, mode, cfg.use_pallas, cfg.use_device_prng, cfg.interpret,
+                axis_index=axis_index,
             )
             for i, o in zip(idxs, _split_like(mean, group)):
                 out[i] = o
@@ -1097,25 +1277,34 @@ class Exchange:
 
     # -- exchanges -----------------------------------------------------
 
-    def pmean(self, x: Array, state: ExchangeState, key: Array):
-        """Unbiased mean of a flat vector over the exchange axis."""
-        mean = self.compressor.pmean(x, self.cfg, state, key)
+    def pmean(self, x: Array, state: ExchangeState, key: Array,
+              axis_index=None):
+        """Unbiased mean of a flat vector over the exchange axis.
+
+        ``axis_index`` (optional traced scalar) supplies this device's
+        position along the exchange axis for per-device key derivation on
+        partially-manual meshes where ``lax.axis_index`` cannot lower
+        (see :func:`_axis_key`); byte-identical when the value matches.
+        """
+        mean = self.compressor.pmean(x, self.cfg, state, key, axis_index)
         hist = self._flat_hist(x) if self._qada_active() else None
         return mean, self._advance(state, hist)
 
-    def pmean_tree(self, tree, state: ExchangeState, key: Array):
+    def pmean_tree(self, tree, state: ExchangeState, key: Array,
+                   axis_index=None):
         """Unbiased mean of a gradient pytree (bucket-fused / per policy)."""
         if self.cfg.mode == "leafwise":
-            return self.pmean_leafwise(tree, state, key)
-        mean = self.compressor.pmean_tree(tree, self.cfg, state, key)
+            return self.pmean_leafwise(tree, state, key, axis_index)
+        mean = self.compressor.pmean_tree(tree, self.cfg, state, key, axis_index)
         hist = self._tree_hist(tree) if self._qada_active() else None
         return mean, self._advance(state, hist)
 
-    def pmean_leafwise(self, tree, state: ExchangeState, key: Array):
+    def pmean_leafwise(self, tree, state: ExchangeState, key: Array,
+                       axis_index=None):
         """Sharding-preserving per-leaf exchange (production mesh)."""
         cfg = dataclasses.replace(self.cfg, mode="leafwise")
         self.compressor.validate(cfg)  # loud, not a silent flat fallback
-        mean = self.compressor.pmean_tree(tree, cfg, state, key)
+        mean = self.compressor.pmean_tree(tree, cfg, state, key, axis_index)
         hist = self._leafwise_hist(tree) if self._qada_active() else None
         return mean, self._advance(state, hist)
 
@@ -1151,6 +1340,41 @@ class Exchange:
         )
 
     # -- accounting ----------------------------------------------------
+
+    def coded_bits_tree(self, tree, state: ExchangeState) -> Array:
+        """Traced Theorem-2 estimate of the entropy-coded bits ONE worker
+        would broadcast for this pytree (CODE o Q with an optimal prefix
+        code), under the current level table.
+
+        The fixed-width payloads actually shipped (int8/int4 — XLA cannot
+        move ragged bitstreams) are accounted by :meth:`wire_bytes_tree`;
+        this is the Section 3.2 code-length the paper proves on top, so
+        EXPERIMENTS tables can show both.  The pmf is the *expected*
+        index distribution of the unbiased rounding (no PRNG), over the
+        bucket-padded flat vector — the same coordinates the fixed-width
+        payload pays for, so the two are directly comparable
+        (``coded_bits <= 8 * compress_wire_bytes`` for 8-bit configs;
+        tested against the :mod:`repro.core.coding` numpy oracle).
+        Returns f32 0.0 for every compressor except ``qgenx`` — randk
+        ships values+indices (no index entropy to code) and layerwise
+        would need per-group pmfs against BOTH level tables (its
+        dominant big-leaf group is quantized with ``levels_lo``, which a
+        single-table estimate would silently misprice).
+        """
+        if self.cfg.compressor != "qgenx":
+            return jnp.float32(0.0)
+        q = self._hist_quant()
+        flat = jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32)
+             for l in jax.tree_util.tree_leaves(tree)]
+        )
+        v2d, _ = _pad_to_buckets(flat, q.bucket_size)
+        norms = bucket_norms(v2d, q.q_norm)
+        safe = jnp.where(norms > 0, norms, 1.0)
+        u = jnp.clip(jnp.abs(v2d) / safe[:, None], 0.0, 1.0)
+        pmf = expected_index_pmf(u, state.levels)
+        nb = v2d.shape[0]
+        return theorem2_bits_traced(pmf, nb * q.bucket_size, nb)
 
     def _qada_wire_bytes(self) -> float:
         """The qada schedule psums the [qada_bins] f32 histogram once per

@@ -10,17 +10,19 @@ with the *adaptive step-size* (Theorems 3/4):
 
     gamma_t = K (1 + sum_{i<t} sum_k ||Vhat_{k,i} - Vhat_{k,i+1/2}||^2)^{-1/2}
 
-Variants (Examples 3.1-3.3) differ in what Vhat_{k,t} is:
+Variants (Examples 3.1-3.3) differ ONLY in where the extrapolation
+feedback Vhat_{k,t} comes from — that choice is an
+:class:`repro.core.methods.OracleSchedule` (``da`` | ``de`` | ``optda``),
+and the recursion algebra itself (half step, dual accumulation, commit)
+lives in :mod:`repro.core.methods` so this toy VI loop and the
+model-scale optimizer (:mod:`repro.optim.qgenx`) are built from the SAME
+primitives — bit-identical on the same oracle sequence for every method
+(tested in ``tests/test_qgenx_optimizer.py``).
 
-* ``da``    — Vhat_{k,t} = 0 (dual averaging; no extrapolation query)
-* ``de``    — Vhat_{k,t} = Q(g_k(X_t)) (dual extrapolation; 2 oracle calls/iter)
-* ``optda`` — Vhat_{k,t} = Q(g_{k,t-1/2}) (optimistic; reuses last half-step
-  feedback, 1 oracle call/iter)
-
-This module is the *theory-faithful* implementation used for validating the
-paper's rates on monotone VI problems; model-scale training uses the same
-quantized-exchange machinery inside ``repro/optim`` (ExtraAdam — the paper's
-experimental instantiation) and ``repro/core/compressed_collectives``.
+This module is the *theory-faithful* implementation used for validating
+the paper's rates on monotone VI problems; model-scale training runs the
+same engine through :func:`repro.launch.steps.make_train_step`
+(``--optimizer qgenx --method {de,optda}``).
 
 Each worker's dual vector is quantized independently (unbiased), matching
 Algorithm 1's broadcast of CODE o Q(V_{k,t}); the aggregation averages the K
@@ -39,6 +41,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.exchange import Exchange, ExchangeConfig, make_exchange
+from repro.core.methods import (
+    METHODS,
+    commit_params,
+    dual_step,
+    get_method,
+    half_step,
+    sq_increment,
+)
 from repro.core.quantization import (
     QuantConfig,
     uniform_levels,
@@ -57,7 +67,7 @@ class QGenXConfig:
     gamma_scale: float = 1.0  # optional scale on the adaptive step-size
 
     def __post_init__(self):
-        if self.variant not in ("da", "de", "optda"):
+        if self.variant not in METHODS:
             raise ValueError(f"unknown variant {self.variant}")
 
     def make_exchange(self) -> Optional[Exchange]:
@@ -178,44 +188,42 @@ def qgenx_step(
     """
     K = cfg.num_workers
     d = state.x.shape[0]
+    method = get_method(cfg.variant)  # the oracle schedule (method engine)
     ex = cfg.make_exchange()  # same Exchange seam as the train step
     k_q1, k_q2, k_o1, k_o2, k_lv = jax.random.split(key, 5)
 
     gamma_t = _gamma(state.sum_sq, K, cfg.gamma_scale)
 
-    # ---- first (extrapolation) exchange: Vhat_{k,t} --------------------
-    n_exchanges = 1
-    if cfg.variant == "da":
-        v_hat_t = jnp.zeros((K, d), jnp.float32)
-        n_exchanges = 0  # no communication for the zero vector
-    elif cfg.variant == "de":
+    # ---- extrapolation feedback Vhat_{k,t} per the oracle schedule ------
+    if method.uses_prev_half:  # optda: carried feedback, no fresh broadcast
+        v_hat_t = state.prev_half
+    elif method.oracle_calls == 2:  # de: fresh oracle + broadcast at X_t
         keys_o = jax.random.split(k_o1, K)
         v_t = jax.vmap(lambda k: oracle(state.x, k))(keys_o)
         keys_q = jax.random.split(k_q1, K)
         v_hat_t = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, ex))(
             v_t, keys_q
         )
-    else:  # optda: reuse last half-step feedback (already quantized then)
-        v_hat_t = state.prev_half
-        n_exchanges = 0  # no fresh broadcast needed
+    else:  # da: zero extrapolation feedback, nothing to communicate
+        v_hat_t = jnp.zeros((K, d), jnp.float32)
 
-    x_half = state.x - gamma_t / K * jnp.sum(v_hat_t, axis=0)
+    x_half = half_step(state.x, jnp.sum(v_hat_t, axis=0) / K, gamma_t)
 
-    # ---- second exchange: Vhat_{k,t+1/2} --------------------------------
+    # ---- the (always fresh) half-step exchange: Vhat_{k,t+1/2} ----------
     keys_o2 = jax.random.split(k_o2, K)
     v_half = jax.vmap(lambda k: oracle(x_half, k))(keys_o2)
     keys_q2 = jax.random.split(k_q2, K)
     v_hat_half = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, ex))(
         v_half, keys_q2
     )
-    n_exchanges += 1
 
-    y_next = state.y - jnp.sum(v_hat_half, axis=0) / K
+    y_next = dual_step(state.y, jnp.sum(v_hat_half, axis=0) / K)
 
     # ---- adaptive step-size bookkeeping ---------------------------------
-    sum_sq = state.sum_sq + jnp.sum((v_hat_t - v_hat_half) ** 2)
+    sum_sq = state.sum_sq + sq_increment(v_hat_t, v_hat_half)
     gamma_next = _gamma(sum_sq, K, cfg.gamma_scale)
-    x_next = gamma_next * y_next
+    x_next = commit_params(jnp.zeros_like(state.x), y_next, gamma_next,
+                           like=state.x)  # origin-anchored: X = gamma Y
 
     # ---- QAda level refresh (sufficient statistics of fresh duals) ------
     levels = state.levels
@@ -235,7 +243,7 @@ def qgenx_step(
         levels=levels,
         x_avg=x_avg,
         t=t_next,
-        bits_sent=state.bits_sent + n_exchanges * _per_iter_bits(d, ex),
+        bits_sent=state.bits_sent + method.exchanges * _per_iter_bits(d, ex),
     )
 
 

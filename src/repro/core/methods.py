@@ -1,0 +1,140 @@
+"""The extragradient method engine — one recursion, several oracle schedules.
+
+The paper's template (Algorithm 1 / Section 3.1) is a single recursion on
+the pair (X, Y):
+
+    X_{t+1/2} = X_t      - gamma_t    * Vbar_t          (extrapolate)
+    Y_{t+1}   = Y_t      - Vbar_{t+1/2}                 (dual accumulation)
+    X_{t+1}   = anchor   + gamma_{t+1} * Y_{t+1}        (commit)
+
+where ``Vbar`` is the worker-mean of the (compressed, exchanged) dual
+vectors and gamma follows the adaptive rule of Theorems 3/4
+(:func:`repro.core.extragradient.adaptive_gamma`).  What distinguishes the
+paper's Examples 3.1-3.3 is ONLY where ``Vbar_t`` — the extrapolation
+feedback — comes from:
+
+* ``da``    (Ex. 3.1, dual averaging):   Vbar_t = 0 — no extrapolation
+  query, 1 fresh oracle call and 1 broadcast round per iteration.
+* ``de``    (Ex. 3.2, dual extrapolation): Vbar_t = fresh oracle at X_t —
+  2 oracle calls and 2 broadcast rounds per iteration.
+* ``optda`` (Ex. 3.3, optimistic DA):    Vbar_t = Vbar_{t-1/2}, the
+  previous half-step feedback carried across iterations — 1 oracle call
+  and 1 broadcast round per iteration, the oracle-optimal schedule.
+
+That classification is an :class:`OracleSchedule`; the recursion algebra
+itself lives here as pytree-generic primitives (:func:`half_step`,
+:func:`dual_step`, :func:`commit_params`).  Both consumers — the toy VI
+loop (:mod:`repro.core.extragradient`) and the model-scale optimizer
+(:mod:`repro.optim.qgenx` via :func:`repro.launch.steps.make_train_step`)
+— build their step out of these exact functions, which is what makes the
+bit-identical toy-vs-trainer parity tests possible for every method (see
+``tests/test_qgenx_optimizer.py``).
+
+Example — one ``optda`` iteration at the tree level::
+
+    m = get_method("optda")            # 1 oracle call, carries prev_half
+    vbar_t = state.prev_half           # m.uses_prev_half
+    x_half = half_step(x, vbar_t, gamma_t)
+    vbar_h = exchange(oracle(x_half))  # the single fresh call
+    y      = dual_step(y, vbar_h)
+    x      = commit_params(anchor, y, gamma_next, like=x)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleSchedule:
+    """Where the extrapolation feedback comes from, and what it costs.
+
+    Attributes:
+      name: registry key — "da" | "de" | "optda".
+      oracle_calls: fresh oracle (gradient) queries per iteration.
+      exchanges: compressed broadcast rounds per iteration (the wire
+        accounting multiplier; ``da``/``optda`` skip the extrapolation
+        broadcast — zero and carried feedback cost no fresh wire).
+      uses_prev_half: True iff the method carries Vbar_{t-1/2} across
+        iterations (the ``prev_half`` slot in the optimizer state).
+    """
+
+    name: str
+    oracle_calls: int
+    exchanges: int
+    uses_prev_half: bool
+
+
+METHODS = {
+    "da": OracleSchedule("da", oracle_calls=1, exchanges=1,
+                         uses_prev_half=False),
+    "de": OracleSchedule("de", oracle_calls=2, exchanges=2,
+                         uses_prev_half=False),
+    "optda": OracleSchedule("optda", oracle_calls=1, exchanges=1,
+                            uses_prev_half=True),
+}
+
+
+def get_method(name: str) -> OracleSchedule:
+    """Registry lookup; unknown names raise listing what IS registered.
+
+    >>> get_method("optda").oracle_calls
+    1
+    """
+    try:
+        return METHODS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; registered: {sorted(METHODS)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# The recursion algebra (pytree-generic; f32 accumulation, dtype-preserving)
+# ---------------------------------------------------------------------------
+
+
+def half_step(x, vbar, gamma_t):
+    """X_{t+1/2} = X_t - gamma_t * Vbar_t, leafwise in f32, cast back.
+
+    ``x`` and ``vbar`` are matching pytrees (or bare arrays — a pytree of
+    one leaf); ``gamma_t`` is a traced scalar from ``adaptive_gamma``.
+    """
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - gamma_t * g.astype(jnp.float32))
+        .astype(p.dtype),
+        x, vbar,
+    )
+
+
+def dual_step(y, vbar_half):
+    """Y_{t+1} = Y_t - Vbar_{t+1/2} (f32 dual accumulator)."""
+    return jax.tree_util.tree_map(
+        lambda yl, g: yl - g.astype(jnp.float32), y, vbar_half
+    )
+
+
+def commit_params(anchor, y, gamma_next, like):
+    """X_{t+1} = anchor + gamma_{t+1} * Y_{t+1}, cast to ``like``'s dtypes.
+
+    The toy loop anchors at the origin (pass zeros); the model-scale
+    optimizer anchors at X_1 so initializations survive gamma decay (the
+    two coincide bit-for-bit when X_1 = 0 — the parity-test identity).
+    """
+    return jax.tree_util.tree_map(
+        lambda a, yl, p: (a + gamma_next * yl).astype(p.dtype),
+        anchor, y, like,
+    )
+
+
+def sq_increment(v1, v2):
+    """||V_t - V_{t+1/2}||^2 summed over all leaves (one worker's share of
+    the adaptive-gamma statistic; the caller psums over workers)."""
+    return sum(
+        jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
+        for a, b in zip(jax.tree_util.tree_leaves(v1),
+                        jax.tree_util.tree_leaves(v2))
+    )

@@ -137,6 +137,7 @@ def lower_combo(
     overrides=None,
     tag: str = "",
     optimizer: str = "extra_adam",
+    method: str = "de",
 ):
     _hlo_tag = tag
     """Lower+compile one (arch, shape) on the given mesh. Returns report."""
@@ -151,12 +152,19 @@ def lower_combo(
                               "(see DESIGN.md long_500k table)"}
     if shape.kind == "train":
         cfg = dataclasses.replace(cfg, remat=True)
+    multi_pod = "pod" in mesh.axis_names
     if mode == "qgenx":
         cfg = dataclasses.replace(cfg, onehot_embed=True)
+        if multi_pod:
+            # the pod exchange wraps the step in a PARTIALLY-manual
+            # shard_map (auto= inner axes) whose while-loop lowering
+            # XLA's SPMD partitioner rejects (IsManualSubgroup check):
+            # unroll the layer scan and take the scan-free attention path
+            cfg = dataclasses.replace(cfg, unroll_scan=True,
+                                      blockwise_attn=False)
 
     model = build(cfg)
     dp = data_axes(mesh)
-    multi_pod = "pod" in mesh.axis_names
 
     # abstract params
     params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
@@ -179,18 +187,22 @@ def lower_combo(
     repl = NamedSharding(mesh, P())
 
     if shape.kind == "train":
-        opt_cfg = opt.OptimizerConfig(name=optimizer)
+        opt_cfg = opt.OptimizerConfig(name=optimizer, method=method)
         # params as an argument (not a closure) so abstract leaves trace
         opt_shape = jax.eval_shape(
             lambda p: opt.init_state(opt_cfg, p), params_shape
         )
         if optimizer == "qgenx":
             # anchor/dual accumulator shard like their params; scalars
-            # (sum_sq, count) replicated
+            # (sum_sq, count) replicated; the optda method additionally
+            # carries the params-shaped prev_half feedback (same pspecs)
+            from repro.core.methods import get_method
             from repro.optim.qgenx import QGenXOptState
 
             opt_pspecs = QGenXOptState(
                 anchor=pspecs, y=pspecs, sum_sq=P(), count=P(),
+                prev_half=(pspecs if get_method(method).uses_prev_half
+                           else None),
             )
         else:
             # moments shard like their params; count replicated; the
@@ -209,10 +221,13 @@ def lower_combo(
         ex_cfg = None
         if mode == "qgenx" and multi_pod:
             # the pure-pmean control (quant=None) still routes through the
-            # shard_map via the "none" compressor
+            # shard_map via the "none" compressor; allreduce_fallback:
+            # this jaxlib's SPMD partitioner lowers only all-reduce under
+            # the partially-manual mesh (see ExchangeConfig docstring)
             ex_cfg = ExchangeConfig(
                 compressor="qgenx" if quant is not None else "none",
                 quant=quant, mode="leafwise", axis_name="pod",
+                allreduce_fallback=True,
             )
         step = make_train_step(model, opt_cfg, exchange=ex_cfg, mesh=mesh)
         ex = make_exchange(ex_cfg) if ex_cfg is not None else None
@@ -221,7 +236,7 @@ def lower_combo(
         )
         ex_sharding = jax.tree_util.tree_map(lambda _: repl, ex_struct)
         metric_sharding = {"loss": repl, "wire_bytes": repl,
-                           "param_drift": repl}
+                           "param_drift": repl, "coded_bits_est": repl}
         jitted = jax.jit(
             step,
             in_shardings=(param_sharding, opt_sharding, ex_sharding,
@@ -336,16 +351,19 @@ def lower_combo(
 
 
 def run_and_save(arch, shape_name, mesh_kind, mode, out_dir, overrides=None,
-                 tag="", quant_bits=8, optimizer="extra_adam"):
+                 tag="", quant_bits=8, optimizer="extra_adam", method="de"):
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     name = f"{arch}__{shape_name}__{mesh_kind}__{mode}"
     if optimizer != "extra_adam":
         name += f"__{optimizer}"
+    if method != "de":
+        name += f"__{method}"
     if tag:
         name += f"__{tag}"
     try:
         rep = lower_combo(arch, shape_name, mesh, mode=mode, overrides=overrides,
-                          quant_bits=quant_bits, tag=tag, optimizer=optimizer)
+                          quant_bits=quant_bits, tag=tag, optimizer=optimizer,
+                          method=method)
         rep["tag"] = tag
         rep["overrides"] = list(overrides or [])
     except Exception as e:  # record failures as bugs to fix
@@ -389,6 +407,9 @@ def main():
                     choices=("adam", "extra_adam", "optimistic_adam", "qgenx"),
                     help="train-shape optimizer to lower (qgenx = the "
                          "paper's adaptive-step-size extragradient)")
+    ap.add_argument("--method", default="de", choices=("de", "optda"),
+                    help="qgenx oracle schedule (optda carries the "
+                         "params-shaped prev_half slot in the opt state)")
     args = ap.parse_args()
 
     archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
@@ -403,7 +424,7 @@ def main():
             rep = run_and_save(arch, shape, args.mesh, args.mode, args.out,
                                overrides=args.override, tag=args.tag,
                                quant_bits=args.qgenx_bits,
-                               optimizer=args.optimizer)
+                               optimizer=args.optimizer, method=args.method)
             n_fail += rep["status"] == "error"
     raise SystemExit(1 if n_fail else 0)
 

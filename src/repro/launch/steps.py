@@ -27,9 +27,13 @@ this step (asserted equal to the trace-time wire recorder in tests).
 
 Optimizers: the ExtraAdam family (the paper's experimental instantiation)
 and ``qgenx`` — the paper's OWN adaptive-step-size extragradient
-(:mod:`repro.optim.qgenx`, Theorems 3/4) running on real models; both
-gradient exchanges of the extra-gradient step are compressed, exactly like
-Algorithm 1's two broadcast rounds.
+(:mod:`repro.optim.qgenx`, Theorems 3/4) running on real models.  The
+``qgenx`` oracle schedule is a method-engine choice
+(:mod:`repro.core.methods`, ``--method`` on the train CLI): ``de``
+(Example 3.2) compresses BOTH broadcast rounds of the extra-gradient step
+(2 oracle calls/step), ``optda`` (Example 3.3) reuses the previous
+half-step feedback carried in ``QGenXOptState.prev_half`` and pays ONE
+oracle call and one broadcast round per step.
 
 Local-update regime (``ExchangeConfig.sync_every = K``): workers take K
 local (extra)gradient steps between compressed exchanges.  The exchanges
@@ -56,6 +60,8 @@ from repro.core.exchange import (
     make_exchange,
     record_wire,
 )
+from repro.core.extragradient import adaptive_gamma
+from repro.core.methods import commit_params, get_method
 from repro.core.quantization import QuantConfig
 from repro.models.model import Model
 from repro.optim import optimizers as opt
@@ -122,10 +128,19 @@ def make_train_step(
         exchange = _legacy_exchange_config(quant, compress_axis, compress_mode)
     ex = make_exchange(exchange) if isinstance(exchange, ExchangeConfig) else exchange
 
+    if opt_cfg.name == "qgenx" and get_method(opt_cfg.method).name not in (
+        "de", "optda",
+    ):
+        raise ValueError(
+            f"make_train_step supports qgenx methods 'de'/'optda', got "
+            f"{opt_cfg.method!r} (the 'da' schedule has no model-scale step)"
+        )
+
     loss_fn = make_loss_fn(model)
     grad_fn = jax.value_and_grad(loss_fn)
     axis_name = ex.cfg.axis_name if ex is not None else None
     sync_every = ex.cfg.sync_every if ex is not None else 1
+    recenter_every = ex.cfg.recenter_every if ex is not None else 0
 
     def _probe(params):
         """First ``drift_probe`` parameter coordinates as one f32 vector."""
@@ -150,9 +165,14 @@ def make_train_step(
         msd = jax.lax.pmean(jnp.mean((probe - mean) ** 2), axis_name)
         return jnp.sqrt(msd)
 
-    def core_step(params, opt_state, ex_state, batch, key):
+    def core_step(params, opt_state, ex_state, batch, key, axis_ix=None):
         k1, k2 = jax.random.split(key)
         st_in = ex_state
+        # device position along the exchange axis: a [1] slice of a
+        # sharded arange when the caller threads it (partially-manual
+        # meshes cannot lower lax.axis_index — see exchange._axis_key);
+        # the exchange falls back to lax.axis_index when None
+        ix = axis_ix[0] if axis_ix is not None else None
         # local-update gating: exchanges only fire on every sync_every-th
         # optimizer step (the counter rides in every optimizer's state)
         if sync_every > 1:
@@ -166,14 +186,15 @@ def make_train_step(
             # pmean_tree routes mode="leafwise" to the sharding-preserving
             # per-leaf path internally (production mesh: inner axes auto)
             if is_sync is None:
-                return ex.pmean_tree(grads, ex_state, key)
+                return ex.pmean_tree(grads, ex_state, key, ix)
             return jax.lax.cond(
                 is_sync,
-                lambda g, st, k: ex.pmean_tree(g, st, k),
+                lambda g, st, k: ex.pmean_tree(g, st, k, ix),
                 lambda g, st, k: (g, st),
                 grads, ex_state, key,
             )
 
+        n_workers = jax.lax.psum(1, axis_name) if ex is not None else 1
         if opt_cfg.name == "extra_adam":
             loss1, g1 = grad_fn(params, batch)
             g1, ex_state = exchange_grads(g1, ex_state, k1)
@@ -181,10 +202,31 @@ def make_train_step(
             loss, g2 = grad_fn(params_half, batch)
             g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
+        elif opt_cfg.name == "qgenx" and get_method(opt_cfg.method).uses_prev_half:
+            # optda (Example 3.3): the extrapolation feedback is the
+            # PREVIOUS half-step exchanged mean carried in the optimizer
+            # state — one oracle call and one broadcast round per step
+            ghat1 = opt_state.prev_half
+            params_half = qgenx_opt.extrapolate(
+                opt_cfg, params, opt_state, ghat1, n_workers
+            )
+            loss, g2 = grad_fn(params_half, batch)
+            ghat2, ex_state = exchange_grads(g2, ex_state, k2)
+            # sum_k ||Vbar_{t} - g_{k,t+1/2}||^2 — the carried feedback vs
+            # this worker's fresh half-step oracle (at K=1 uncompressed
+            # this is exactly the toy optda statistic; parity-tested)
+            sq = qgenx_opt.local_sq_diff(ghat1, g2)
+            if ex is not None:
+                sq = jax.lax.psum(sq, axis_name)
+            new_params, new_state = qgenx_opt.commit(
+                opt_cfg, params, opt_state, ghat2, sq, n_workers,
+                prev_half=ghat2,
+            )
+            g2 = ghat2  # for the wire accounting below (same tree shapes)
         elif opt_cfg.name == "qgenx":
-            # the paper's Algorithm 1 on the model: extragradient with the
-            # adaptive gamma rule (statistics in the QGenXOptState pytree)
-            n_workers = jax.lax.psum(1, axis_name) if ex is not None else 1
+            # de (Example 3.2) — the paper's Algorithm 1 on the model:
+            # extragradient with the adaptive gamma rule (statistics in
+            # the QGenXOptState pytree)
             loss1, g1 = grad_fn(params, batch)
             ghat1, ex_state = exchange_grads(g1, ex_state, k1)
             params_half = qgenx_opt.extrapolate(
@@ -210,16 +252,75 @@ def make_train_step(
             loss, g2 = grad_fn(params, batch)
             g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.adam_step(opt_cfg, params, opt_state, g2)
+
+        st_grad = ex_state  # state after the GRADIENT exchanges only —
+        # the re-centering exchange below moves a params/Y-shaped tree
+        # whose magnitude distribution the gradient pmf does not describe,
+        # so the coded-bits metric prices gradient broadcasts alone
+        if recenter_every > 0 and ex is not None:
+            # compressed parameter re-centering (Beznosikov et al. 2023:
+            # compressed iterate sync): every recenter_every-th step the
+            # drifted local iterates are exchanged through the SAME
+            # compressor registry as the gradients — local-update runs
+            # trade drift for wire.  For qgenx the dual accumulator Y is
+            # the iterate (X = anchor + gamma Y with anchor/gamma
+            # replicated), so re-centering Y re-centers X consistently;
+            # the adam family re-centers the params directly.
+            is_rc = (opt_state.count % recenter_every) == (recenter_every - 1)
+            k3 = jax.random.fold_in(key, 0x5eed)  # disjoint from split(key)
+
+            if opt_cfg.name == "qgenx":
+                def _recenter(args):
+                    p, st, exst = args
+                    y_bar, exst = ex.pmean_tree(st.y, exst, k3, ix)
+                    gamma = adaptive_gamma(
+                        st.sum_sq, n_workers, opt_cfg.gamma_scale
+                    )
+                    p = commit_params(st.anchor, y_bar, gamma, like=p)
+                    return p, st._replace(y=y_bar), exst
+            else:
+                def _recenter(args):
+                    p, st, exst = args
+                    p_bar, exst = ex.pmean_tree(p, exst, k3, ix)
+                    return p_bar, st, exst
+
+            new_params, new_state, ex_state = jax.lax.cond(
+                is_rc, _recenter, lambda args: args,
+                (new_params, new_state, ex_state),
+            )
         drift = jnp.float32(0.0)
+        coded = jnp.float32(0.0)
         if ex is not None:
             loss = jax.lax.pmean(loss, axis_name)  # replicated metric
             # analytic per-exchange operand bytes (static shapes) times the
             # number of exchanges this step performed (= step counter delta;
-            # 0 on non-sync steps under the local-update regime)
+            # 0 on non-sync steps under the local-update regime; the
+            # re-centering exchange bumps the counter too, so its bytes
+            # are counted by the same formula)
             axis_size = jax.lax.psum(1, axis_name)
             per_call = ex.wire_bytes_tree(g2, axis_size)
             n_calls = (ex_state.step - st_in.step).astype(jnp.float32)
             wire = jnp.float32(per_call) * n_calls
+            # Theorem 2 entropy-coded wire estimate (Section 3.2): what
+            # one worker's GRADIENT broadcasts would cost under CODE o Q
+            # with an optimal prefix code, alongside the fixed-width
+            # wire_bytes actually shipped — per-call x n_grad_calls.
+            # The O(n) pmf pass is gated like the drift probe: under the
+            # local-update regime it only runs on sync steps (its result
+            # would be multiplied by a traced zero otherwise, which XLA
+            # cannot eliminate).
+            if ex.cfg.compressor == "qgenx":
+                n_grad_calls = (st_grad.step - st_in.step).astype(jnp.float32)
+                if is_sync is None:
+                    coded_per = ex.coded_bits_tree(g2, st_in)
+                else:
+                    coded_per = jax.lax.cond(
+                        is_sync,
+                        lambda g: ex.coded_bits_tree(g, st_in),
+                        lambda g: jnp.float32(0.0),
+                        g2,
+                    )
+                coded = coded_per * n_grad_calls
             if is_sync is not None:
                 # drift probe: measured (and paid) only on sync steps —
                 # params provably stay replicated when every step syncs
@@ -231,7 +332,8 @@ def make_train_step(
                 wire = wire + jnp.float32(probe_bytes) * is_sync.astype(jnp.float32)
         else:
             wire = jnp.float32(0.0)
-        metrics = {"loss": loss, "wire_bytes": wire, "param_drift": drift}
+        metrics = {"loss": loss, "wire_bytes": wire, "param_drift": drift,
+                   "coded_bits_est": coded}
         return new_params, new_state, ex_state, metrics
 
     if ex is None:
@@ -243,21 +345,26 @@ def make_train_step(
     # DP across it); batch sharded on its leading dim; key replicated
     # (folded inside); all OTHER mesh axes stay under automatic (GSPMD)
     # partitioning — shard_map's ``auto`` frozenset selects the non-manual
-    # subset.
+    # subset.  The sharded arange gives every device its position along
+    # the exchange axis WITHOUT lax.axis_index (whose partition-id
+    # lowering the SPMD partitioner rejects on partially-manual meshes);
+    # the folded value is identical, so so are all downstream bytes.
     def sharded_step(params, opt_state, ex_state, batch, key):
         batch_specs = {
             k: P(axis_name, *([None] * (v.ndim - 1))) for k, v in batch.items()
         }
+        axis_ix = jnp.arange(mesh.shape[axis_name], dtype=jnp.int32)
         fn = shard_map(
             core_step,
             mesh=mesh,
-            in_specs=(P(), P(), P(), batch_specs, P()),
+            in_specs=(P(), P(), P(), batch_specs, P(), P(axis_name)),
             out_specs=(P(), P(), P(),
-                       {"loss": P(), "wire_bytes": P(), "param_drift": P()}),
+                       {"loss": P(), "wire_bytes": P(), "param_drift": P(),
+                        "coded_bits_est": P()}),
             check_rep=False,
             auto=frozenset(mesh.axis_names) - {axis_name},
         )
-        return fn(params, opt_state, ex_state, batch, key)
+        return fn(params, opt_state, ex_state, batch, key, axis_ix)
 
     return sharded_step
 

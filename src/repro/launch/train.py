@@ -87,6 +87,7 @@ def build_exchange_config(args, n_dev: int):
         level_update_every=args.level_update_every,
         rand_frac=args.rand_frac,
         sync_every=args.sync_every,
+        recenter_every=args.recenter_every,
     )
 
 
@@ -100,6 +101,10 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", default="extra_adam",
                     choices=("adam", "extra_adam", "optimistic_adam", "qgenx"))
+    ap.add_argument("--method", default="de", choices=("de", "optda"),
+                    help="qgenx oracle schedule (core/methods.py): de = "
+                         "2 oracle calls/step (Example 3.2), optda = 1 "
+                         "call/step reusing prev_half feedback (Example 3.3)")
     ap.add_argument("--gamma-scale", type=float, default=0.02,
                     help="qgenx: scale on the adaptive step-size rule "
                          "(gamma_t = scale*K/sqrt(1+sum_sq))")
@@ -121,6 +126,11 @@ def main(argv=None):
     ap.add_argument("--sync-every", type=int, default=1,
                     help="local-update regime: K local steps between "
                          "compressed exchanges (1 = exchange every step)")
+    ap.add_argument("--recenter-every", type=int, default=0,
+                    help="compressed parameter re-centering cadence under "
+                         "local updates (0 = never; R = every R-th step "
+                         "the drifted iterates are exchanged through the "
+                         "same compressor)")
     ap.add_argument("--host-devices", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
@@ -141,7 +151,8 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     opt_cfg = opt.OptimizerConfig(name=args.optimizer, lr=args.lr,
-                                  gamma_scale=args.gamma_scale)
+                                  gamma_scale=args.gamma_scale,
+                                  method=args.method)
     opt_state = opt.init_state(opt_cfg, params)
 
     ex_cfg = build_exchange_config(args, n_dev)
@@ -151,8 +162,11 @@ def main(argv=None):
         print(f"[train] exchange: compressor={ex_cfg.compressor} "
               f"mode={ex_cfg.mode} axis={ex_cfg.axis_name} "
               f"use_pallas={ex_cfg.use_pallas} schedule={ex_cfg.level_schedule} "
-              f"sync_every={ex_cfg.sync_every}",
+              f"sync_every={ex_cfg.sync_every} "
+              f"recenter_every={ex_cfg.recenter_every}",
               flush=True)
+    if args.optimizer == "qgenx":
+        print(f"[train] qgenx method={args.method}", flush=True)
 
     step_fn = make_train_step(model, opt_cfg, exchange=ex, mesh=mesh)
     repl = NamedSharding(mesh, P())
@@ -204,9 +218,12 @@ def main(argv=None):
         loss = float(metrics["loss"])
         wire = float(metrics["wire_bytes"])
         drift = float(metrics["param_drift"])
+        coded = float(metrics["coded_bits_est"])
         times.append(time.time() - t0)
         if step % args.log_every == 0:
             tail = f" drift={drift:.3e}" if args.sync_every > 1 else ""
+            if coded:
+                tail += f" coded_bits={coded:.3e}"
             print(f"[train] step={step} loss={loss:.4f} "
                   f"dt={times[-1]*1e3:.0f}ms wire={wire:.3e}B{tail}", flush=True)
         if args.checkpoint_dir and args.checkpoint_every and (

@@ -209,7 +209,16 @@ def forward(params, cfg: ModelConfig, tokens: Array, extra_embeds=None):
             body = jax.checkpoint(
                 body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
             )
-        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+        if cfg.unroll_scan:
+            # scan-free lowering (partial-manual shard_map cannot lower
+            # while loops — see ModelConfig.unroll_scan); same math, the
+            # stacked layer params are sliced per period
+            carry = (x, aux)
+            for i in range(n_periods):
+                carry, _ = body(carry, _layer_at(params["layers"], i))
+            x, aux = carry
+        else:
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
     for r, lp in enumerate(params["layers_tail"]):
         x, a = block_apply(lp, cfg, x, positions, *flags[r % period])
         aux = aux + a

@@ -13,7 +13,10 @@ provide the trainer-facing family:
   extrapolation direction (1 oracle call / step — OptDA, Example 3.3)
 * ``qgenx``      — the paper's OWN algorithm with the adaptive step-size
   rule (Theorems 3/4), no tuning beyond ``gamma_scale``; implemented in
-  :mod:`repro.optim.qgenx` (2 oracle calls / step, DE pattern)
+  :mod:`repro.optim.qgenx` on the method engine
+  (:mod:`repro.core.methods`): ``method="de"`` is the two-call dual
+  extrapolation (Example 3.2), ``method="optda"`` the one-call optimistic
+  schedule reusing ``prev_half`` feedback (Example 3.3)
 
 All states are plain pytrees; dtypes follow MaxText practice (f32 master
 moments, bf16 params supported).
@@ -40,6 +43,7 @@ class OptimizerConfig:
     weight_decay: float = 0.0
     grad_clip: float = 1.0
     gamma_scale: float = 1.0  # qgenx: scale on the adaptive step-size rule
+    method: str = "de"  # qgenx: oracle schedule ("de" | "optda"), methods.py
 
 
 class AdamState(NamedTuple):

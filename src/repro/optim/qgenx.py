@@ -6,14 +6,21 @@ step-size tuning) only ran in the toy VI loop
 (:func:`repro.core.extragradient.qgenx_step`); model-scale training fell
 back to generic adam/extra_adam.  Here the same template is packaged as a
 proper optimizer for :func:`repro.launch.steps.make_train_step`
-(``--optimizer qgenx`` on the train CLI):
+(``--optimizer qgenx --method {de,optda}`` on the train CLI):
 
     X_{t+1/2} = X_t - gamma_t * ghat_t            (extrapolate)
     Y_{t+1}   = Y_t - ghat_{t+1/2}                (dual accumulation)
     X_{t+1}   = X_1 + gamma_{t+1} * Y_{t+1}       (commit)
 
-with the adaptive step-size shared — the very same function, not a copy —
-with the toy loop (:func:`repro.core.extragradient.adaptive_gamma`):
+The recursion algebra (half step, dual accumulation, commit) is built
+from :mod:`repro.core.methods` — the SAME primitives the toy VI loop
+uses — and ``ghat_t`` follows the configured
+:class:`~repro.core.methods.OracleSchedule`: ``de`` (Example 3.2) takes a
+fresh exchanged gradient at X_t (2 oracle calls/step), ``optda``
+(Example 3.3) reuses the previous half-step feedback carried in the
+``prev_half`` state slot (1 oracle call/step — the oracle-optimal
+schedule).  The adaptive step-size is shared too — the very same
+function, not a copy (:func:`repro.core.extragradient.adaptive_gamma`):
 
     gamma_t = gamma_scale * K * (1 + sum_sq)^{-1/2}
     sum_sq  = sum_{i<t} sum_k ||g_{k,i} - g_{k,i+1/2}||^2
@@ -58,6 +65,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.extragradient import adaptive_gamma
+from repro.core.methods import (
+    commit_params,
+    dual_step,
+    get_method,
+    half_step,
+    sq_increment,
+)
 from repro.optim.optimizers import OptimizerConfig, _clip
 
 Array = jax.Array
@@ -70,24 +84,34 @@ class QGenXOptState(NamedTuple):
     y: dual accumulator Y_t (f32, zero-initialized).
     sum_sq: running sum of squared oracle differences feeding
       :func:`repro.core.extragradient.adaptive_gamma`.
-    count: completed optimizer steps (also drives ``sync_every`` gating).
+    count: completed optimizer steps (also drives ``sync_every`` /
+      ``recenter_every`` gating).
+    prev_half: method=optda only — the exchanged mean half-step dual
+      Vbar_{t-1/2} carried across steps (f32, params-shaped); ``None``
+      under ``de`` so the de state pytree is unchanged from before the
+      method engine existed (checkpoints stay compatible).
     """
 
     anchor: Any
     y: Any
     sum_sq: Array
     count: Array
+    prev_half: Any = None
 
 
 def init_qgenx_state(cfg: OptimizerConfig, params) -> QGenXOptState:
     # jnp.copy (not astype): the anchor must be a fresh buffer, never an
     # alias of f32 params — trainers donate params and opt_state together
     f32 = lambda p: jnp.copy(p).astype(jnp.float32)  # noqa: E731
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    method = get_method(cfg.method)
     return QGenXOptState(
         anchor=jax.tree_util.tree_map(f32, params),
-        y=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        y=jax.tree_util.tree_map(zeros, params),
         sum_sq=jnp.zeros((), jnp.float32),
         count=jnp.zeros((), jnp.int32),
+        prev_half=(jax.tree_util.tree_map(zeros, params)
+                   if method.uses_prev_half else None),
     )
 
 
@@ -95,12 +119,11 @@ def local_sq_diff(g1, g2) -> Array:
     """This worker's ``||g_t - g_{t+1/2}||^2`` (summed over all leaves).
 
     The caller psums the result over the exchange axis to form the paper's
-    ``sum_k`` — the increment :func:`commit` adds to ``sum_sq``.
+    ``sum_k`` — the increment :func:`commit` adds to ``sum_sq``.  (This is
+    :func:`repro.core.methods.sq_increment` — the toy loop accumulates the
+    very same statistic.)
     """
-    return sum(
-        jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2)
-        for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2))
-    )
+    return sq_increment(g1, g2)
 
 
 def extrapolate(cfg: OptimizerConfig, params, state: QGenXOptState, ghat,
@@ -114,33 +137,34 @@ def extrapolate(cfg: OptimizerConfig, params, state: QGenXOptState, ghat,
     """
     ghat = _clip(ghat, cfg.grad_clip)
     gamma_t = adaptive_gamma(state.sum_sq, num_workers, cfg.gamma_scale)
-    return jax.tree_util.tree_map(
-        lambda p, g: (p.astype(jnp.float32) - gamma_t * g.astype(jnp.float32))
-        .astype(p.dtype),
-        params, ghat,
-    )
+    return half_step(params, ghat, gamma_t)
 
 
 def commit(cfg: OptimizerConfig, params, state: QGenXOptState, ghat_half,
-           sq_increment: Array, num_workers):
+           sq_inc: Array, num_workers, prev_half=None):
     """Second half: dual accumulation + adaptive re-projection.
 
-    Y_{t+1} = Y_t - ghat_{t+1/2};  sum_sq += sq_increment;
+    Y_{t+1} = Y_t - ghat_{t+1/2};  sum_sq += sq_inc;
     X_{t+1} = anchor + gamma_{t+1} * Y_{t+1}.
 
-    ``sq_increment`` is the psum-merged local oracle difference
+    ``sq_inc`` is the psum-merged local oracle difference
     (:func:`local_sq_diff`) — the statistic the adaptive rule is built on.
+    Under ``method=optda`` the caller passes ``prev_half=ghat_half`` so
+    the exchanged half-step feedback is carried (f32) into the next
+    step's extrapolation; ``de`` leaves the slot as-is (``None``).
     """
     ghat_half = _clip(ghat_half, cfg.grad_clip)
-    y = jax.tree_util.tree_map(
-        lambda yl, g: yl - g.astype(jnp.float32), state.y, ghat_half
-    )
-    sum_sq = state.sum_sq + sq_increment.astype(jnp.float32)
+    y = dual_step(state.y, ghat_half)
+    sum_sq = state.sum_sq + sq_inc.astype(jnp.float32)
     gamma_next = adaptive_gamma(sum_sq, num_workers, cfg.gamma_scale)
-    new_params = jax.tree_util.tree_map(
-        lambda a, yl, p: (a + gamma_next * yl).astype(p.dtype),
-        state.anchor, y, params,
-    )
+    new_params = commit_params(state.anchor, y, gamma_next, like=params)
+    if prev_half is not None:
+        prev_half = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), prev_half
+        )
+    else:
+        prev_half = state.prev_half
     return new_params, QGenXOptState(
-        anchor=state.anchor, y=y, sum_sq=sum_sq, count=state.count + 1
+        anchor=state.anchor, y=y, sum_sq=sum_sq, count=state.count + 1,
+        prev_half=prev_half,
     )

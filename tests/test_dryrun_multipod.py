@@ -1,0 +1,59 @@
+"""Regression: the multi-pod ``--mode qgenx`` dryrun lowers + compiles.
+
+Broken from PR 2 to PR 4 with two stacked XLA SPMD failures under the
+partially-manual (``auto=``) shard_map on jaxlib 0.4.36:
+
+1. ``lax.axis_index`` in the exchange's per-device key derivation lowers
+   to a ``partition-id`` instruction the SPMD partitioner rejects — fixed
+   by threading the device position in as a sharded ``arange`` slice
+   (``make_train_step``; byte-identical keys).
+2. The partitioner aborts (fatal ``IsManualSubgroup`` checks) on
+   while-loops, gathers/scatters and non-all-reduce collectives inside
+   the partially-manual region — fixed by ``ModelConfig.unroll_scan`` +
+   scan-free attention, gather-free level-table selects, and the leafwise
+   exchange's ``allreduce_fallback`` (all set by the dryrun's qgenx
+   mode; documented in the respective docstrings).
+
+The subprocess shrinks the model via ``--override`` so the 512-device
+compile stays CI-sized (~30 s); the full-size combo compiles too
+(~5 min, not run here).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(ROOT, "src")
+_PP = os.environ.get("PYTHONPATH")
+ENV = {**os.environ, "PYTHONPATH": _SRC + os.pathsep + _PP if _PP else _SRC}
+
+
+@pytest.mark.parametrize("qgenx_bits", [8, 32])
+def test_multipod_qgenx_dryrun_lowers(tmp_path, qgenx_bits):
+    """Both the quantized pod exchange and its fp32 control lower on the
+    2x16x16 multi-pod mesh (the ROADMAP FIX item)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "tinyllama-1.1b", "--shape", "train_4k",
+         "--mesh", "multi", "--mode", "qgenx",
+         "--qgenx-bits", str(qgenx_bits),
+         "--override", "num_layers=2", "--override", "d_model=256",
+         "--override", "num_heads=4", "--override", "num_kv_heads=4",
+         "--override", "d_ff=512", "--override", "vocab_size=2048",
+         "--out", str(tmp_path)],
+        cwd=ROOT, env=ENV, capture_output=True, text=True, timeout=840,
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    arts = [p for p in os.listdir(tmp_path) if p.endswith(".json")]
+    assert len(arts) == 1, arts
+    with open(os.path.join(tmp_path, arts[0])) as f:
+        rep = json.load(f)
+    assert rep["status"] == "ok", rep.get("error")
+    assert rep["mesh"] == "2x16x16"
+    # the pod exchange is in the compiled HLO: all-reduce collectives
+    # carry the (fallback f32) exchange payload
+    assert rep["collectives"]["total_wire_bytes"] > 0

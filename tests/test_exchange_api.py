@@ -314,6 +314,89 @@ def test_qada_schedule_updates_levels_in_train_step():
     assert np.all(np.diff(moved) > 0)
 
 
+def test_qada_cadence_under_sync_every_counts_exchange_calls():
+    """QAda x sync_every, the pinned decision (DESIGN.md §1.5): the
+    histogram accumulates ONLY on sync steps (the exchanged gradients are
+    the population the quantizer sees; local steps pay no collective),
+    and the refresh cadence counts EXCHANGE CALLS, not optimizer steps —
+    so sync_every=K stretches a refresh period K× in wall-clock."""
+    quant = QuantConfig(num_levels=15, bucket_size=256)
+    ex_cfg = ExchangeConfig(
+        compressor="qgenx", quant=quant, mode="two_phase", axis_name="data",
+        level_schedule="qada", level_update_every=2, sync_every=2,
+    )
+    step, params, opt_state, ex_state, batch, mesh = _tiny_train_setup(ex_cfg)
+    uniform = np.asarray(uniform_levels(quant.num_levels))
+
+    states = []
+    jitted = jax.jit(step)
+    with mesh:
+        for i in range(4):
+            params, opt_state, ex_state, _ = jitted(
+                params, opt_state, ex_state, batch, jax.random.PRNGKey(i)
+            )
+            states.append(ex_state)
+
+    # local steps (t=0, 2): the exchange state is untouched — no exchange,
+    # no histogram accumulation, no counter bump
+    assert int(states[0].step) == 0
+    assert np.allclose(np.asarray(states[0].levels), uniform)
+    assert float(np.sum(np.asarray(states[0].hist))) == 0.0
+    assert int(states[2].step) == int(states[1].step)
+    np.testing.assert_array_equal(np.asarray(states[2].hist),
+                                  np.asarray(states[1].hist))
+    # sync steps (t=1, 3): 2 exchange calls each; with level_update_every=2
+    # the refresh fires on the 2nd call of each sync step — after 4
+    # optimizer steps the table has moved (2 refreshes, cadence = calls)
+    assert int(states[1].step) == 2
+    assert int(states[3].step) == 4
+    assert not np.allclose(np.asarray(states[3].levels), uniform, atol=1e-4)
+
+
+def test_leafwise_allreduce_fallback_unbiased_and_counted():
+    """The partial-manual-mesh fallback (DEQ-then-psum): same expected
+    mean as the all-gather leafwise path, f32 operand recorded, and the
+    analytic wire accounting says 4 B/coordinate."""
+    import repro.core.exchange as exchange_mod
+
+    quant = QuantConfig(num_levels=15, bucket_size=256)
+    mk = lambda fb: make_exchange(ExchangeConfig(  # noqa: E731
+        compressor="qgenx", quant=quant, mode="leafwise", axis_name="data",
+        allreduce_fallback=fb,
+    ))
+    ex_gather, ex_fb = mk(False), mk(True)
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(3), (8, 256),
+                                   jnp.float32)}
+    mesh = _one_dev_mesh()
+
+    outs = {}
+    for tag, ex in (("gather", ex_gather), ("fallback", ex_fb)):
+        exchange_mod.wire_trace_start()
+
+        @jax.jit
+        def run(t, key, ex=ex):
+            def f(tl, k):
+                mean, st = ex.pmean_tree(tl, ex.init_state(), k)
+                return mean
+
+            return shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                             out_specs=P(), check_rep=False)(t, key)
+
+        outs[tag] = run(tree, KEY)
+        rec = exchange_mod.wire_trace_stop()
+        recorded = sum(b for _, b in rec)
+        assert recorded == ex.wire_bytes_tree(tree, 1), (tag, rec)
+        if tag == "fallback":
+            assert any(n == "leaf_fallback" for n, _ in rec), rec
+            assert recorded == 4.0 * tree["w"].size  # f32 operand, honest
+
+    # 1 device, same key -> same quantization draw: the fallback's local
+    # DEQ equals the gather path's dequantized own payload exactly
+    np.testing.assert_allclose(np.asarray(outs["gather"]["w"]),
+                               np.asarray(outs["fallback"]["w"]),
+                               rtol=1e-6, atol=1e-7)
+
+
 def test_qada_refreshes_both_layerwise_tables():
     """The layerwise compressor carries two level tables; a QAda refresh
     must move both (the low-bit table quantizes the dominant group)."""

@@ -44,6 +44,15 @@ def test_sync_every_local_updates_8dev():
     assert "ALL OK" in r.stdout
 
 
+def test_recenter_wire_accounting_8dev():
+    """Compressed parameter re-centering + the one-call optda schedule on
+    8 devices: bytes only on re-center steps, recorder agreement to the
+    byte, drift strictly reduced for exactly one extra exchange."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_recenter.py")])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
 def test_train_qgenx_optimizer_8dev():
     """Acceptance: --optimizer qgenx trains via the CLI on 8 devices with
     a compressed exchange and the local-update regime."""

@@ -1,16 +1,25 @@
 """Model-scale adaptive Q-GenX optimizer + the sync_every local-update regime.
 
-Pins the PR's two contracts:
+Pins the method-engine contracts:
 
 * the model-scale optimizer (:mod:`repro.optim.qgenx`) runs the SAME
-  adaptive step-size rule as the toy VI loop — literally the same
-  function, and bit-identical trajectories on the same oracle sequence
-  (anchored at X_1 = 0, where the two recursions coincide exactly);
+  adaptive step-size rule AND the same recursion algebra
+  (:mod:`repro.core.methods`) as the toy VI loop — literally the same
+  functions, and bit-identical trajectories on the same oracle sequence
+  for EVERY method (de and optda; anchored at X_1 = 0, where the two
+  recursions coincide exactly);
+* ``--method optda`` pays exactly ONE oracle call per step (counted at
+  trace time — each counted call is one forward+backward in the jaxpr)
+  and carries the exchanged half-step feedback in the ``prev_half``
+  state slot; ``method=de`` keeps the 4-slot state pytree unchanged;
 * ``ExchangeConfig.sync_every`` gates the exchange: ``sync_every=1`` is
   byte-identical to the PR 2 path (params + wire_bytes, no cond in the
   jaxpr), K>1 moves bytes only on sync steps, with the trace-time
   recorder agreeing with the metric (8-device version in
-  tests/_multidev_sync_exchange.py via test_multidevice.py).
+  tests/_multidev_sync_exchange.py via test_multidevice.py);
+* ``ExchangeConfig.recenter_every`` re-centers the drifted iterates
+  through the compressor on schedule, with the bytes counted by the same
+  metric/recorder (8-device version in tests/_multidev_recenter.py).
 """
 
 import dataclasses
@@ -112,6 +121,142 @@ def test_gamma_rule_bit_identical_to_toy_loop():
             np.asarray(eg.adaptive_gamma(st.sum_sq, 1, scale)),
             np.asarray(eg.adaptive_gamma(toy.sum_sq, 1, scale)),
         )
+
+
+def test_optda_bit_identical_to_toy_loop():
+    """The one-call optimistic schedule: drive the toy optda recursion and
+    the model-scale optimizer on the SAME oracle sequence (K=1, no
+    compression, X_1 = 0) — iterates, sum_sq and the carried prev_half
+    must be bit-identical."""
+    d, T, scale = 64, 12, 0.37
+    x0 = jnp.zeros((d,), jnp.float32)
+
+    def oracle(z, k):
+        return 0.8 * z + 0.3 * jax.random.normal(k, z.shape, jnp.float32)
+
+    toy_cfg = eg.QGenXConfig(variant="optda", num_workers=1, gamma_scale=scale)
+    toy = eg.qgenx_init(x0, toy_cfg)
+
+    opt_cfg = opt.OptimizerConfig(name="qgenx", method="optda",
+                                  gamma_scale=scale, grad_clip=0.0)
+    params = {"w": x0}
+    st = opt.init_state(opt_cfg, params)
+    assert st.prev_half is not None  # the optda slot exists...
+    np.testing.assert_array_equal(np.asarray(st.prev_half["w"]),
+                                  np.zeros((d,), np.float32))
+
+    keys = jax.random.split(KEY, T)
+    for t in range(T):
+        toy = eg.qgenx_step(toy, oracle, keys[t], toy_cfg)
+
+        # same key discipline as the toy (5-way split, per-worker oracle
+        # keys); optda makes NO fresh call at X_t — it reuses prev_half
+        _, _, _, k_o2, _ = jax.random.split(keys[t], 5)
+        v1 = st.prev_half
+        half = qgenx_opt.extrapolate(opt_cfg, params, st, v1, 1)
+        v2 = oracle(half["w"], jax.random.split(k_o2, 1)[0])
+        sq = qgenx_opt.local_sq_diff(v1, {"w": v2})
+        params, st = qgenx_opt.commit(opt_cfg, params, st, {"w": v2}, sq, 1,
+                                      prev_half={"w": v2})
+
+        np.testing.assert_array_equal(np.asarray(params["w"]),
+                                      np.asarray(toy.x)), t
+        np.testing.assert_array_equal(np.asarray(st.sum_sq),
+                                      np.asarray(toy.sum_sq))
+        np.testing.assert_array_equal(np.asarray(st.prev_half["w"]),
+                                      np.asarray(toy.prev_half[0]))
+
+
+def test_oracle_calls_per_step_match_method(monkeypatch):
+    """Acceptance: --method optda traces exactly ONE oracle evaluation per
+    train step, de exactly two (each counted call is one forward+backward
+    pair embedded in the jaxpr — counted while make_jaxpr traces)."""
+    from repro.core.methods import get_method
+    from repro.launch import steps as steps_mod
+
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(jax.random.PRNGKey(1))
+    from repro.core.exchange import null_exchange_state
+
+    counts = {}
+    real_make_loss_fn = steps_mod.make_loss_fn
+    jaxpr_sizes = {}
+    for method in ("de", "optda"):
+        calls = []
+
+        def counting_make_loss_fn(m, _calls=calls):
+            lf = real_make_loss_fn(m)
+
+            def counted(p, b):
+                _calls.append(1)
+                return lf(p, b)
+
+            return counted
+
+        monkeypatch.setattr(steps_mod, "make_loss_fn", counting_make_loss_fn)
+        opt_cfg = opt.OptimizerConfig(name="qgenx", method=method,
+                                      gamma_scale=0.02)
+        state = opt.init_state(opt_cfg, params)
+        step = steps_mod.make_train_step(model, opt_cfg)
+        jaxpr = jax.make_jaxpr(step)(params, state, null_exchange_state(),
+                                     batch, KEY)
+        counts[method] = len(calls)
+        jaxpr_sizes[method] = len(jaxpr.jaxpr.eqns)
+    assert counts == {"de": get_method("de").oracle_calls,
+                      "optda": get_method("optda").oracle_calls}, counts
+    assert counts["optda"] == 1
+    # the saved oracle call is visible in the jaxpr itself
+    assert jaxpr_sizes["optda"] < jaxpr_sizes["de"], jaxpr_sizes
+
+
+def test_optda_trains_via_make_train_step():
+    """--method optda runs through the production train step, reduces the
+    loss, and carries nonzero prev_half feedback across steps."""
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt.OptimizerConfig(name="qgenx", method="optda",
+                                  gamma_scale=0.02)
+    state = opt.init_state(opt_cfg, params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    from repro.core.exchange import null_exchange_state
+
+    ex_state = null_exchange_state()
+    batch = _batch(jax.random.PRNGKey(1))
+    losses = []
+    for t in range(8):
+        params, state, ex_state, metrics = step(
+            params, state, ex_state, batch, jax.random.fold_in(KEY, t)
+        )
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert float(state.sum_sq) > 0.0
+    ph_norm = sum(float(jnp.sum(jnp.abs(l)))
+                  for l in jax.tree_util.tree_leaves(state.prev_half))
+    assert ph_norm > 0.0  # the carried feedback is live
+
+
+def test_de_state_pytree_unchanged_by_method_engine():
+    """method=de leaves prev_half=None — the de state pytree has the same
+    structure as before the engine existed (checkpoints stay loadable)."""
+    params = {"a": jnp.ones((8,), jnp.float32)}
+    st_de = opt.init_state(opt.OptimizerConfig(name="qgenx"), params)
+    assert st_de.prev_half is None
+    leaves = jax.tree_util.tree_leaves(st_de)
+    assert len(leaves) == 3 + 1  # anchor, y, sum_sq, count — no 5th slot
+    st_opt = opt.init_state(
+        opt.OptimizerConfig(name="qgenx", method="optda"), params
+    )
+    assert len(jax.tree_util.tree_leaves(st_opt)) == 5
+
+
+def test_unknown_method_rejected():
+    with pytest.raises(ValueError):
+        opt.init_state(opt.OptimizerConfig(name="qgenx", method="nope"),
+                       {"a": jnp.ones((2,))})
+    from repro.core.methods import get_method
+    with pytest.raises(ValueError):
+        get_method("nope")
 
 
 def test_qgenx_state_shapes_and_anchor_copy():
@@ -282,6 +427,89 @@ def test_sync_every_wire_only_on_sync_steps_and_recorder_agrees():
     assert drifts == [0.0] * 4, drifts
     # exchange state advanced only on the sync step (2 pmean calls)
     assert int(ex_state.step) == 2
+
+
+def test_recenter_validation():
+    with pytest.raises(ValueError):
+        ExchangeConfig(recenter_every=-1)
+
+
+def test_recenter_moves_bytes_only_on_recenter_steps():
+    """Compressed parameter re-centering: wire_bytes gains exactly one
+    params-shaped exchange on re-center steps (the trace recorder agrees),
+    and nothing anywhere else."""
+    base = ExchangeConfig(compressor="qgenx", quant=_quant8(),
+                          mode="gather", axis_name="data", sync_every=3)
+    rc = dataclasses.replace(base, recenter_every=3)
+    exchange_mod.wire_trace_start()
+    out_rc, ex, ex_state = _run_steps(rc, 4, opt_name="qgenx")
+    rec = exchange_mod.wire_trace_stop()
+
+    n = sum(l.size for l in jax.tree_util.tree_leaves(out_rc[0][0]))
+    per_call = ex.wire_bytes(n, 1)
+    probe = 4.0 * min(rc.drift_probe, n)
+    # sync step t=2: 2 grad exchanges + probe + 1 re-centering exchange
+    want_sync = 3 * per_call + probe
+    wires = [m["wire_bytes"] for _, m in out_rc]
+    assert wires[0] == wires[1] == wires[3] == 0.0, wires
+    assert wires[2] == want_sync, (wires, want_sync)
+    assert sum(b for _, b in rec) == want_sync, rec
+    # 3 exchange-state bumps on the sync step (2 grads + 1 re-center)
+    assert int(ex_state.step) == 3
+
+
+def test_recenter_changes_params_on_schedule_only():
+    """The re-centered params differ from the no-recenter run exactly
+    from the first re-center step on (1 device: the compressed pmean is a
+    quantize-dequantize pass, so the effect is visible immediately)."""
+    base = ExchangeConfig(compressor="qgenx", quant=_quant8(),
+                          mode="gather", axis_name="data")
+    rc = dataclasses.replace(base, recenter_every=2)
+    out_a, _, _ = _run_steps(base, 3, opt_name="extra_adam")
+    out_b, _, _ = _run_steps(rc, 3, opt_name="extra_adam")
+
+    def same(pa, pb):
+        return all(
+            np.array_equal(np.asarray(la), np.asarray(lb))
+            for la, lb in zip(jax.tree_util.tree_leaves(pa),
+                              jax.tree_util.tree_leaves(pb))
+        )
+
+    assert same(out_a[0][0], out_b[0][0])  # step 0: no recenter yet
+    assert not same(out_a[1][0], out_b[1][0])  # step 1 recentered
+    # loss stays finite through the compressed re-centering
+    assert all(np.isfinite(m["loss"]) for _, m in out_b)
+
+
+def test_recenter_qgenx_keeps_anchor_recursion_consistent():
+    """For the qgenx optimizer the DUAL accumulator is re-centered and the
+    params recomputed as anchor + gamma * Y — the recursion invariant
+    X = anchor + gamma(sum_sq) * Y must hold after a re-center step."""
+    from repro.core.extragradient import adaptive_gamma
+
+    cfg = ExchangeConfig(compressor="qgenx", quant=_quant8(),
+                         mode="gather", axis_name="data", recenter_every=2)
+    model = _reduced_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = opt.OptimizerConfig(name="qgenx", gamma_scale=0.02)
+    state = opt.init_state(opt_cfg, params)
+    ex = make_exchange(cfg)
+    mesh = _one_dev_mesh()
+    step = jax.jit(make_train_step(model, opt_cfg, exchange=ex, mesh=mesh))
+    ex_state = ex.init_state()
+    batch = _batch(jax.random.PRNGKey(1))
+    with mesh:
+        for t in range(2):  # t=1 is the re-center step
+            params, state, ex_state, _ = step(
+                params, state, ex_state, batch, jax.random.fold_in(KEY, t)
+            )
+    gamma = float(adaptive_gamma(state.sum_sq, 1, opt_cfg.gamma_scale))
+    for p, a, y in zip(jax.tree_util.tree_leaves(params),
+                       jax.tree_util.tree_leaves(state.anchor),
+                       jax.tree_util.tree_leaves(state.y)):
+        np.testing.assert_allclose(np.asarray(p),
+                                   np.asarray(a + gamma * y),
+                                   rtol=1e-5, atol=1e-8)
 
 
 def test_sync_every_reduces_total_wire_by_k():
