@@ -210,6 +210,69 @@ def run():
              f"bytes_per_step={per_step:.3e};"
              f"recenter_overhead={(per_ex / rc if rc else 0.0):.3e}")
 
+    # ExchangePlan (DESIGN §1.5): plan-vs-legacy launch counts and the
+    # fused-segment layout — the planned compress_tree/re-centering path
+    # collapses the per-leaf quantize+dequantize launch pair per leaf
+    # into one segment-fused invocation per row-geometry class
+    import dataclasses
+
+    # a params-like pytree: 24 mixed-size leaves, none bucket-aligned
+    tree = {
+        f"layer{i}": jax.random.normal(
+            jax.random.fold_in(KEY, i),
+            ((130 + 17 * i, 96) if i % 3 else (510 + i,)), jnp.float32)
+        for i in range(24)
+    }
+    n_leaves = len(jax.tree_util.tree_leaves(tree))
+    n_tree = sum(l.size for l in jax.tree_util.tree_leaves(tree))
+    key = jax.random.PRNGKey(7)
+    plan_cfg = ExchangeConfig(
+        compressor="qgenx",
+        quant=QuantConfig(num_levels=15, bits=8, bucket_size=512),
+    )
+    def _geometry_classes(ex):
+        plan = ex.plan_for_tree(tree, purpose="compress")
+        return len({(s.quant.bucket_size, s.quant.q_norm, s.quant.stochastic)
+                    for s in plan.segments})
+
+    for use_plan, tag in ((False, "legacy_perleaf"), (True, "plan_fused")):
+        ex = make_exchange(dataclasses.replace(plan_cfg, use_plan=use_plan))
+        fn = jax.jit(lambda t, k, ex=ex: ex.compress_tree(t, k))
+        us = time_fn(fn, tree, key, iters=5)
+        # invocation counts derived from the actual dispatch structure:
+        # the per-leaf path loops once per leaf by construction; the plan
+        # path launches once per row-geometry class of ITS OWN plan
+        launches = _geometry_classes(ex) if use_plan else n_leaves
+        # the pallas variant's jaxpr proves the launch count at trace time
+        ex_pl = make_exchange(dataclasses.replace(
+            plan_cfg, use_plan=use_plan, use_pallas=True))
+        pallas_calls = str(jax.make_jaxpr(
+            lambda t, k: ex_pl.compress_tree(t, k))(tree, key)
+        ).count("pallas_call")
+        emit(f"compress_tree_{tag}_{n_tree}", us,
+             f"quantize_invocations={launches};leaves={n_leaves};"
+             f"pallas_calls={pallas_calls}")
+
+    # fused-segment row: the layerwise per-layer policy as segments of
+    # ONE planned buffer — segment-indexed level tables, one invocation
+    # per row-geometry class instead of per leaf
+    lw = make_exchange(ExchangeConfig(
+        compressor="layerwise",
+        quant=QuantConfig(num_levels=5, bits=4, bucket_size=512),
+        quant_small=QuantConfig(num_levels=15, bits=8, bucket_size=512),
+        layerwise_threshold=16384,
+    ))
+    plan = lw.plan_for_tree(tree, purpose="compress")
+    geometries = {(s.quant.bucket_size, s.quant.q_norm, s.quant.stochastic)
+                  for s in plan.segments}
+    fn = jax.jit(lambda t, k: lw.compress_tree(t, k))
+    us = time_fn(fn, tree, key, iters=5)
+    emit(f"compress_tree_layerwise_plan_segments_{n_tree}", us,
+         f"segments={len(plan.segments)};tables={len(plan.segments)};"
+         f"fused_invocations={len(geometries)};"
+         f"legacy_invocations={n_leaves};"
+         f"pad_coords={plan.total - plan.n_live}")
+
 
 if __name__ == "__main__":
     run()

@@ -1,0 +1,291 @@
+"""Wall-clock train-step benchmark: ExchangePlan vs per-call layout.
+
+Until this harness existed the repo had NEVER measured a train-step time —
+`BENCH_kernels.json` holds contract/analytic rows only, so there was no
+perf trajectory to hold a PR against.  This module times REAL jitted train
+steps on the 8-simulated-host-device mesh (the same topology the
+multidevice CI job and the README quickstart use), with warm-up (and
+compile) excluded and every timed step fenced by ``block_until_ready``,
+and commits the measured plan-vs-legacy rows to ``BENCH_step.json`` at the
+repo root — the baseline this and every future perf PR is checked against
+(CI job ``perf-smoke``).
+
+Numbers are CPU-container numbers: they bound dispatch+compute on 8 forced
+host devices, not TPU throughput — but plan-vs-legacy on identical configs
+is an apples-to-apples layout comparison either way.  The exchange runs
+the jnp reference path (interpret-mode Pallas inside a many-fake-device
+shard_map starves the collective rendezvous on this container — see
+.claude/skills/verify).
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.bench_step                # measure + write BENCH_step.json
+  PYTHONPATH=src:. python -m benchmarks.bench_step --out X.json --iters 3
+  PYTHONPATH=src:. python -m benchmarks.bench_step --check BENCH_step.json
+                                                                  # schema + plan<=legacy*tol, no jax needed
+
+The measuring process re-execs itself with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (device count locks
+at first jax import, so a fresh subprocess is the only honest way).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO_ROOT, "src")
+
+# (config name, train-step knobs).  Names are part of the BENCH_step.json
+# schema the perf-smoke CI job checks.
+CONFIGS = (
+    ("extra_adam_int8_two_phase",
+     dict(optimizer="extra_adam", bits=8, mode="two_phase")),
+    ("qgenx_optda_int4_gather",
+     dict(optimizer="qgenx", method="optda", bits=4, mode="gather")),
+)
+DEFAULT_DEVICES = 8
+DEFAULT_WARMUP = 2
+DEFAULT_ITERS = 5
+# plan must be no slower than legacy within this factor (CPU timer noise
+# on a 2-core container; the committed baseline and the CI re-measure are
+# both held to it)
+RATIO_TOL = 1.15
+
+_JSON_TAG = "BENCH_STEP_JSON:"
+
+
+# ---------------------------------------------------------------------------
+# Inner process: build + time the steps (jax imported HERE, after XLA_FLAGS)
+# ---------------------------------------------------------------------------
+
+
+def _time_step(step_fn, params, opt_state, ex_state, batch, warmup, iters):
+    import jax
+
+    # the production train loop's configuration: ALL carried state donated
+    # (launch/train.py) — rebinding the returned trees keeps this safe
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    key = jax.random.PRNGKey(0)
+    for i in range(warmup):
+        params, opt_state, ex_state, metrics = jitted(
+            params, opt_state, ex_state, batch, jax.random.fold_in(key, i))
+        jax.block_until_ready(metrics["loss"])
+    times = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        params, opt_state, ex_state, metrics = jitted(
+            params, opt_state, ex_state, batch,
+            jax.random.fold_in(key, warmup + i))
+        jax.block_until_ready((params, metrics["loss"]))
+        times.append((time.perf_counter() - t0) * 1e3)
+    times.sort()
+    return times[len(times) // 2], sum(times) / len(times)
+
+
+def run_inner(args) -> None:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs.registry import get_config
+    from repro.core.exchange import ExchangeConfig, make_exchange
+    from repro.core.quantization import QuantConfig
+    from repro.launch.steps import make_train_step
+    from repro.models.model import build
+    from repro.optim import optimizers as opt
+
+    n_dev = jax.device_count()
+    assert n_dev == args.devices, (n_dev, args.devices)
+    mesh = Mesh(np.array(jax.devices()).reshape(n_dev), ("data",))
+    mcfg = dataclasses.replace(
+        get_config("tinyllama-1.1b").reduced(), dtype="float32")
+    model = build(mcfg)
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.seq), 0, mcfg.vocab_size,
+            dtype=jnp.int32),
+        "labels": jax.random.randint(
+            jax.random.PRNGKey(2), (args.batch, args.seq), 0, mcfg.vocab_size,
+            dtype=jnp.int32),
+    }
+
+    rows = []
+    selected = [c for c in CONFIGS if not args.configs or c[0] in args.configs]
+    for name, knobs in selected:
+        opt_cfg = opt.OptimizerConfig(
+            name=knobs["optimizer"], lr=1e-3, gamma_scale=0.02,
+            method=knobs.get("method", "de"))
+        bits = knobs["bits"]
+        quant = QuantConfig(num_levels=15 if bits == 8 else 5, bits=bits,
+                            bucket_size=512)
+        timings = {}
+        for variant, use_plan in (("plan", True), ("legacy", False)):
+            ex_cfg = ExchangeConfig(
+                compressor="qgenx", quant=quant, mode=knobs["mode"],
+                axis_name="data", use_plan=use_plan)
+            params = model.init(jax.random.PRNGKey(0))
+            opt_state = opt.init_state(opt_cfg, params)
+            ex_state = make_exchange(ex_cfg).init_state()
+            step_fn = make_train_step(model, opt_cfg, exchange=ex_cfg,
+                                      mesh=mesh)
+            with mesh:
+                med, mean = _time_step(step_fn, params, opt_state, ex_state,
+                                       batch, args.warmup, args.iters)
+            timings[variant] = med
+            rows.append({"name": f"step_{name}_{variant}",
+                         "ms_median": round(med, 2),
+                         "ms_mean": round(mean, 2)})
+            print(f"# {name}/{variant}: median {med:.1f} ms", file=sys.stderr,
+                  flush=True)
+        rows.append({
+            "name": f"ratio_{name}",
+            "plan_over_legacy": round(timings["plan"] / timings["legacy"], 4),
+        })
+
+    doc = {
+        "section": "step",
+        "meta": {
+            "host_devices": n_dev,
+            "arch": "tinyllama-1.1b (reduced, float32)",
+            "batch": args.batch, "seq": args.seq,
+            "warmup": args.warmup, "iters": args.iters,
+            "note": ("CPU container wall-clock; 8 forced host devices; "
+                     "jnp exchange path (see module docstring). "
+                     "Plan-vs-legacy on identical configs is the "
+                     "apples-to-apples comparison; absolute ms are "
+                     "container-specific."),
+        },
+        "rows": rows,
+    }
+    print(_JSON_TAG + json.dumps(doc), flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Parent process: spawn, collect, write, assert
+# ---------------------------------------------------------------------------
+
+
+def measure(args) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices}")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, REPO_ROOT] + env.get("PYTHONPATH", "").split(os.pathsep))
+    cmd = [sys.executable, "-m", "benchmarks.bench_step", "--inner",
+           "--devices", str(args.devices), "--batch", str(args.batch),
+           "--seq", str(args.seq), "--warmup", str(args.warmup),
+           "--iters", str(args.iters)]
+    for c in args.configs:
+        cmd += ["--configs", c]
+    proc = subprocess.run(cmd, env=env, cwd=REPO_ROOT, capture_output=True,
+                          text=True, timeout=3600)
+    sys.stderr.write(proc.stderr)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stdout)
+        raise RuntimeError(f"inner benchmark failed ({proc.returncode})")
+    for line in proc.stdout.splitlines():
+        if line.startswith(_JSON_TAG):
+            return json.loads(line[len(_JSON_TAG):])
+    raise RuntimeError("inner benchmark emitted no JSON payload")
+
+
+def check_doc(doc: dict, configs=None, tol: float = RATIO_TOL) -> list:
+    """Validate a BENCH_step document; returns a list of problems."""
+    problems = []
+    if doc.get("section") != "step":
+        problems.append("section != 'step'")
+    names = {r.get("name"): r for r in doc.get("rows", [])}
+    for cname in configs or [c for c, _ in CONFIGS]:
+        for variant in ("plan", "legacy"):
+            row = names.get(f"step_{cname}_{variant}")
+            if row is None or "ms_median" not in row:
+                problems.append(f"missing measured row step_{cname}_{variant}")
+        ratio = names.get(f"ratio_{cname}")
+        if ratio is None or "plan_over_legacy" not in ratio:
+            problems.append(f"missing ratio row for {cname}")
+        elif ratio["plan_over_legacy"] > tol:
+            problems.append(
+                f"plan slower than legacy beyond tolerance for {cname}: "
+                f"{ratio['plan_over_legacy']} > {tol}")
+    return problems
+
+
+def run(out: str | None = None) -> None:
+    """benchmarks.run entry point: measure with defaults, write the
+    committed baseline, emit CSV rows."""
+    args = _parse([])
+    doc = measure(args)
+    _finish(doc, args, out or os.path.join(REPO_ROOT, "BENCH_step.json"))
+
+
+def _finish(doc, args, out_path) -> None:
+    from benchmarks.common import emit
+
+    for r in doc["rows"]:
+        if "ms_median" in r:
+            emit(r["name"], r["ms_median"] * 1e3,
+                 f"ms_median={r['ms_median']};ms_mean={r['ms_mean']}")
+        else:
+            emit(r["name"], 0.0, f"plan_over_legacy={r['plan_over_legacy']}")
+    problems = check_doc(doc, configs=args.configs or None, tol=args.tol)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out_path}", file=sys.stderr, flush=True)
+    if problems:
+        # a plain Exception (not SystemExit) so benchmarks/run.py's
+        # per-section isolation catches it and later sections still run
+        raise RuntimeError(
+            "BENCH_step check failed:\n  " + "\n  ".join(problems))
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inner", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=DEFAULT_DEVICES)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--warmup", type=int, default=DEFAULT_WARMUP)
+    ap.add_argument("--iters", type=int, default=DEFAULT_ITERS)
+    ap.add_argument("--configs", action="append", default=[],
+                    choices=[c for c, _ in CONFIGS],
+                    help="subset of configs (repeatable; default: all)")
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT, "BENCH_step.json"))
+    ap.add_argument("--tol", type=float, default=RATIO_TOL,
+                    help="max allowed plan/legacy step-time ratio")
+    ap.add_argument("--check", default="",
+                    help="validate an existing BENCH_step.json (schema + "
+                         "plan<=legacy*tol) instead of measuring")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> None:
+    args = _parse(sys.argv[1:] if argv is None else argv)
+    if args.check:
+        with open(args.check) as f:
+            doc = json.load(f)
+        problems = check_doc(doc, configs=args.configs or None, tol=args.tol)
+        if problems:
+            raise SystemExit(
+                f"{args.check} failed:\n  " + "\n  ".join(problems))
+        print(f"{args.check}: OK "
+              f"({sum(1 for r in doc['rows'] if 'ms_median' in r)} measured "
+              f"rows, ratios within {args.tol}x)")
+        return
+    if args.inner:
+        run_inner(args)
+        return
+    doc = measure(args)
+    _finish(doc, args, args.out)
+
+
+if __name__ == "__main__":
+    main()

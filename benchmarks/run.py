@@ -41,6 +41,7 @@ def main() -> None:
         bench_convergence,
         bench_gan,
         bench_kernels,
+        bench_step,
         bench_variance,
         common,
         roofline,
@@ -51,6 +52,11 @@ def main() -> None:
         "codelength": bench_codelength.run,
         "convergence": bench_convergence.run,
         "kernels": bench_kernels.run,
+        # writes its own BENCH_step.json (measured wall-clock rows are
+        # the point — NOT stripped like the deterministic kernel rows),
+        # honoring --json-dir like the kernels snapshot
+        "step": lambda: bench_step.run(
+            out=os.path.join(args.json_dir, "BENCH_step.json")),
         "gan": lambda: bench_gan.run(steps=args.gan_steps),
         "roofline": roofline.run,
     }

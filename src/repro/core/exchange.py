@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import adaptive_levels as qada
+from repro.core import exchange_plan as xplan
 from repro.core.quantization import (
     QuantConfig,
     _pad_to_buckets,
@@ -653,6 +654,20 @@ class ExchangeConfig:
         coordinate, not the packed payload — on real-TPU jax versions
         whose partitioner lowers all-gather, leave this off and keep the
         compressed wire format.
+      use_plan: route tree exchanges through a static ExchangePlan
+        (:mod:`repro.core.exchange_plan`): the flat buffer is written
+        ONCE in its final tile-aligned layout (no concatenate-then-pad
+        double copy), per-layer policies become segments of one buffer,
+        and the ``compress_tree``/re-centering paths take ONE
+        segment-fused quantize∘dequantize invocation instead of a launch
+        pair per leaf.  Bit-exact with the per-call path for the qgenx
+        and layerwise pmean exchanges (same concatenation order, same
+        padding semantics, same keys — parity-tested); the planned
+        compression paths stay unbiased but draw different noise and pay
+        one shared padding tail per SEGMENT instead of per leaf (the
+        accounting follows, see ``compress_wire_bytes_tree``).  True by
+        default; ``--no-exchange-plan`` on the train CLI is the escape
+        hatch back to the per-call layout.
       recenter_every: compressed parameter re-centering cadence (local
         updates trade drift for wire).  0 (default) = never; R>0 = every
         R-th optimizer step the train step re-centers the drifted
@@ -683,6 +698,7 @@ class ExchangeConfig:
     drift_probe: int = 4096
     recenter_every: int = 0
     allreduce_fallback: bool = False
+    use_plan: bool = True
 
     def __post_init__(self):
         if self.mode not in ("gather", "two_phase", "leafwise"):
@@ -753,7 +769,7 @@ def null_exchange_state() -> ExchangeState:
     signature: callers always thread an ExchangeState)."""
     lv = jnp.asarray([0.0, 1.0], jnp.float32)
     return ExchangeState(
-        levels=lv, levels_lo=lv,
+        levels=lv, levels_lo=jnp.copy(lv),  # donation-safe: no aliasing
         hist=jnp.zeros((1,), jnp.float32), step=jnp.zeros((), jnp.int32),
     )
 
@@ -830,8 +846,36 @@ class Compressor:
             )
 
     def init_levels(self, cfg: ExchangeConfig):
+        # distinct buffers, never aliases: ExchangeState is donated by the
+        # train loop, and XLA rejects the same buffer donated twice
         lv = jnp.asarray([0.0, 1.0], jnp.float32)
-        return lv, lv
+        return lv, jnp.copy(lv)
+
+    # -- ExchangePlan hooks (static flat-buffer layout) -----------------
+
+    def plan_groups(self, leaves_key: tuple, cfg: ExchangeConfig) -> tuple:
+        """Segment grouping policy for the plan: one
+        ``(leaf_ids, quant, table, key_tag)`` tuple per segment, in
+        buffer order.  Default: every leaf in one unquantized segment —
+        no alignment padding, so :meth:`ExchangePlan.pack` is then
+        exactly the legacy flat concatenation (randk keeps its
+        bit-identical layout for free)."""
+        return ((tuple(range(len(leaves_key))), None, 0, None),)
+
+    def plan_for(self, leaves, cfg: ExchangeConfig, axis_size,
+                 purpose: str) -> xplan.ExchangePlan:
+        """The (cached) static plan for this leaf list under this config."""
+        lk = xplan.leaf_key(leaves)
+        return xplan.build_plan(
+            lk, self.plan_groups(lk, cfg), cfg.mode, int(axis_size), purpose
+        )
+
+    def _pmean_planned(self, flat, plan: xplan.ExchangePlan,
+                       cfg: ExchangeConfig, state: ExchangeState, key,
+                       axis_index):
+        """Exchange the packed buffer (default: one flat stream; per-
+        segment-policy compressors override with a per-segment loop)."""
+        return self.pmean(flat, cfg, state, key, axis_index)
 
     def pmean(self, x, cfg: ExchangeConfig, state: ExchangeState, key,
               axis_index=None):
@@ -839,8 +883,23 @@ class Compressor:
 
     def pmean_tree(self, tree, cfg: ExchangeConfig, state: ExchangeState, key,
                    axis_index=None):
-        """Default: bucket-fuse all leaves into one flat vector."""
+        """Default: bucket-fuse all leaves into one flat vector.
+
+        With ``cfg.use_plan`` (default) the buffer is packed ONCE in its
+        final tile-aligned layout through the static ExchangePlan — same
+        concatenation order and padding semantics as the per-call path
+        (bit-exact; the downstream exchange's own pad becomes a no-op),
+        without the concatenate-then-pad double copy.
+        """
         leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if cfg.use_plan:
+            axis_size = jax.lax.psum(1, cfg.axis_name)
+            plan = self.plan_for(leaves, cfg, axis_size, "pmean")
+            flat = plan.pack(leaves)
+            out = self._pmean_planned(flat, plan, cfg, state, key, axis_index)
+            return jax.tree_util.tree_unflatten(
+                treedef, plan.unpack(out, leaves)
+            )
         flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
         out = self.pmean(flat, cfg, state, key, axis_index)
         return jax.tree_util.tree_unflatten(treedef, _split_like(out, leaves))
@@ -882,19 +941,24 @@ class Compressor:
         raise NotImplementedError
 
     def compress_wire_bytes_tree(self, shapes, cfg: ExchangeConfig) -> float:
-        """Broadcast bytes for one compressed pytree — per leaf, matching
-        what :meth:`compress_tree` actually emits (per-leaf padding and
-        per-leaf minimum supports are real bytes)."""
+        """Broadcast bytes for one compressed pytree, matching what
+        :meth:`compress_tree` actually emits.  Per-leaf paths pay one
+        padding tail (and any per-leaf minimum support) per leaf; under
+        the plan, level-table compressors emit ONE fused buffer per
+        segment, so the accounting charges one shared padding tail per
+        SEGMENT instead — always ≤ the per-leaf bytes, and the delta is
+        exactly the saved per-leaf bucket ceils (documented + tested in
+        ``tests/test_exchange_plan.py``)."""
+        if cfg.use_plan and self.has_levels:
+            plan = self.plan_for(shapes, cfg, 1, "compress")
+            return plan.compress_payload_bytes()
         return float(sum(
             self.compress_wire_bytes(_size_of(s), cfg) for s in shapes
         ))
 
 
-def _size_of(s) -> int:
-    size = 1
-    for d in (s.shape if hasattr(s, "shape") else s):
-        size *= d
-    return size
+# single shape-product definition shared with the plan's offset math
+_size_of = xplan.size_of
 
 
 def _split_like(flat: Array, leaves):
@@ -951,7 +1015,12 @@ class QgenxCompressor(Compressor):
 
     def init_levels(self, cfg):
         lv = uniform_levels(self._quant(cfg).num_levels)
-        return lv, lv
+        return lv, jnp.copy(lv)  # distinct buffers — see Compressor.init_levels
+
+    def plan_groups(self, leaves_key, cfg):
+        # one segment, every leaf, the primary table — the plan's padded
+        # tail IS the bucket/quota pad _qgenx_pmean would have applied
+        return ((tuple(range(len(leaves_key))), self._quant(cfg), 0, None),)
 
     def pmean(self, x, cfg, state, key, axis_index=None):
         if cfg.mode == "leafwise":
@@ -975,9 +1044,26 @@ class QgenxCompressor(Compressor):
         return quantize_dequantize(v, levels, key, self._quant(cfg)).reshape(v.shape)
 
     def compress_tree(self, tree, cfg, levels, key):
+        """Per-worker unbiased compression of a pytree.
+
+        Planned (default): ONE segment-fused quantize∘dequantize
+        invocation over the packed flat buffer (one shared padding
+        tail), instead of a quantize + dequantize launch pair per leaf.
+        Still Definition 1 per bucket — different noise partitioning
+        than the per-leaf path, same unbiased contract.
+        """
         q = self._quant(cfg)
         lv = levels if levels is not None else uniform_levels(q.num_levels)
-        return quantize_dequantize_pytree(tree, lv, key, q)
+        if not cfg.use_plan:
+            return quantize_dequantize_pytree(tree, lv, key, q)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        plan = self.plan_for(leaves, cfg, 1, "compress")
+        hat = xplan.fused_compress(
+            plan, plan.pack(leaves), (lv,) * len(plan.segments), key,
+            use_pallas=cfg.use_pallas, use_device_prng=cfg.use_device_prng,
+            interpret=cfg.interpret,
+        )
+        return jax.tree_util.tree_unflatten(treedef, plan.unpack(hat, leaves))
 
     def wire_bytes(self, n, axis_size, cfg):
         if cfg.mode == "leafwise":
@@ -990,6 +1076,10 @@ class QgenxCompressor(Compressor):
 
     def wire_bytes_tree(self, shapes, axis_size, cfg):
         if cfg.mode == "leafwise":
+            # the sharding-preserving leafwise exchange is per-leaf BY
+            # CONSTRUCTION (payloads keep each leaf's shape, no flat
+            # buffer exists to plan) — it deliberately stays outside the
+            # ExchangePlan, and so does its accounting
             if cfg.allreduce_fallback:
                 return float(sum(4.0 * _size_of(s) for s in shapes))
             return float(sum(
@@ -1074,6 +1164,39 @@ class LayerwiseCompressor(Compressor):
         small = [i for i, l in enumerate(leaves) if l.size <= cfg.layerwise_threshold]
         return big, small
 
+    def plan_groups(self, leaves_key, cfg):
+        """Segment table of the per-layer policy: the big-leaf group is
+        one low-bit segment against ``levels_lo``, the small-leaf group
+        one conservative segment against ``levels`` — group order and
+        per-group key tags exactly mirror the per-call path (bit-exact
+        pmean)."""
+        lo, hi = self._cfgs(cfg)
+        sizes = [_size_of(shape) for shape, _ in leaves_key]
+        big = tuple(i for i, s in enumerate(sizes) if s > cfg.layerwise_threshold)
+        small = tuple(i for i, s in enumerate(sizes) if s <= cfg.layerwise_threshold)
+        return tuple(
+            (ids, qc, table, gid)
+            for gid, (ids, qc, table) in enumerate(
+                ((big, lo, 1), (small, hi, 0))
+            )
+            if ids
+        )
+
+    def _pmean_planned(self, flat, plan, cfg, state, key, axis_index):
+        """One exchange per plan segment, each a pre-padded slice of the
+        SHARED buffer with its own level table and quantizer — the
+        downstream pad in ``_qgenx_pmean`` is a no-op."""
+        outs = []
+        for seg in plan.segments:
+            levels = state.levels_lo if seg.table == 1 else state.levels
+            outs.append(_qgenx_pmean(
+                flat[seg.start: seg.stop], cfg.axis_name, levels,
+                jax.random.fold_in(key, seg.key_tag), seg.quant, cfg.mode,
+                cfg.use_pallas, cfg.use_device_prng, cfg.interpret,
+                axis_index=axis_index,
+            ))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
     def pmean(self, x, cfg, state, key, axis_index=None):
         self.validate(cfg)
         lo, hi = self._cfgs(cfg)
@@ -1088,6 +1211,10 @@ class LayerwiseCompressor(Compressor):
 
     def pmean_tree(self, tree, cfg, state, key, axis_index=None):
         self.validate(cfg)
+        if cfg.use_plan:
+            # base plan path packs the segmented buffer once;
+            # _pmean_planned above runs one exchange per segment
+            return super().pmean_tree(tree, cfg, state, key, axis_index)
         lo, hi = self._cfgs(cfg)
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         big, small = self._group(leaves, cfg)
@@ -1119,6 +1246,32 @@ class LayerwiseCompressor(Compressor):
         if levels is None or levels.shape[0] != qcfg.num_symbols:
             levels = uniform_levels(qcfg.num_levels)
         return quantize_dequantize(v, levels, key, qcfg).reshape(v.shape)
+
+    def _segment_table(self, seg, levels):
+        """The caller's table when it fits this segment's quantizer (same
+        size-class rule as :meth:`compress`); uniform otherwise."""
+        if levels is not None and levels.shape[0] == seg.quant.num_symbols:
+            return levels
+        return uniform_levels(seg.quant.num_levels)
+
+    def compress_tree(self, tree, cfg, levels, key):
+        """Planned (default): the whole pytree through the segment-fused
+        quantize∘dequantize — segments sharing row geometry take ONE
+        invocation with segment-indexed level tables (the per-leaf path
+        paid a quantize + dequantize launch pair per leaf)."""
+        if not cfg.use_plan:
+            return super().compress_tree(tree, cfg, levels, key)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        plan = self.plan_for(leaves, cfg, 1, "compress")
+        tables = tuple(
+            self._segment_table(seg, levels) for seg in plan.segments
+        )
+        hat = xplan.fused_compress(
+            plan, plan.pack(leaves), tables, key,
+            use_pallas=cfg.use_pallas, use_device_prng=cfg.use_device_prng,
+            interpret=cfg.interpret,
+        )
+        return jax.tree_util.tree_unflatten(treedef, plan.unpack(hat, leaves))
 
     def wire_bytes(self, n, axis_size, cfg):
         self.validate(cfg)
@@ -1339,6 +1492,16 @@ class Exchange:
             sweeps=self.cfg.qada_sweeps, bisect_iters=self.cfg.qada_bisect_iters,
         )
 
+    # -- layout --------------------------------------------------------
+
+    def plan_for_tree(self, tree, axis_size: int = 1,
+                      purpose: str = "pmean") -> xplan.ExchangePlan:
+        """The static ExchangePlan this exchange uses for ``tree`` —
+        offsets, segment table, padding tails (benchmarks and tests
+        introspect it; ``plan.describe()`` is the layout one-liner)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        return self.compressor.plan_for(leaves, self.cfg, axis_size, purpose)
+
     # -- accounting ----------------------------------------------------
 
     def coded_bits_tree(self, tree, state: ExchangeState) -> Array:
@@ -1364,11 +1527,18 @@ class Exchange:
         if self.cfg.compressor != "qgenx":
             return jnp.float32(0.0)
         q = self._hist_quant()
-        flat = jnp.concatenate(
-            [l.reshape(-1).astype(jnp.float32)
-             for l in jax.tree_util.tree_leaves(tree)]
-        )
-        v2d, _ = _pad_to_buckets(flat, q.bucket_size)
+        leaves = jax.tree_util.tree_leaves(tree)
+        if self.cfg.use_plan:
+            # the same (cached) plan the compress path uses: the packed
+            # buffer is already bucket-aligned, so the pad is free — and
+            # bit-identical to the concat+pad it replaces
+            plan = self.compressor.plan_for(leaves, self.cfg, 1, "compress")
+            v2d = plan.pack(leaves).reshape(-1, q.bucket_size)
+        else:
+            flat = jnp.concatenate(
+                [l.reshape(-1).astype(jnp.float32) for l in leaves]
+            )
+            v2d, _ = _pad_to_buckets(flat, q.bucket_size)
         norms = bucket_norms(v2d, q.q_norm)
         safe = jnp.where(norms > 0, norms, 1.0)
         u = jnp.clip(jnp.abs(v2d) / safe[:, None], 0.0, 1.0)

@@ -123,6 +123,10 @@ def commit_params(anchor, y, gamma_next, like):
     The toy loop anchors at the origin (pass zeros); the model-scale
     optimizer anchors at X_1 so initializations survive gamma decay (the
     two coincide bit-for-bit when X_1 = 0 — the parity-test identity).
+    The compressed re-centering path recommits through this same function
+    after exchanging Y (``recenter_every``); the Y exchange rides the
+    compressor's static ExchangePlan like every other tree exchange, so
+    the re-centered commit reads a freshly unpacked planned buffer.
     """
     return jax.tree_util.tree_map(
         lambda a, yl, p: (a + gamma_next * yl).astype(p.dtype),

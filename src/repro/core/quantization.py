@@ -291,6 +291,17 @@ def dequantize_pytree(qtree, shapes_tree, levels: Array, cfg: QuantConfig):
 
 
 def quantize_dequantize_pytree(tree, levels: Array, key: Array, cfg: QuantConfig):
+    """Per-leaf Q∘DEQ: one quantize+dequantize invocation per leaf, each
+    with its own bucket-padding tail and an independent key.
+
+    This is the UNPLANNED layout — the Exchange seam's ``compress_tree``
+    routes through the static ExchangePlan instead by default
+    (:mod:`repro.core.exchange_plan`: the whole tree packed into one
+    flat buffer, a single segment-fused invocation, one shared padding
+    tail per segment) and only falls back here under
+    ``ExchangeConfig(use_plan=False)``.  Kept as the per-leaf oracle the
+    plan path's unbiasedness is contract-tested against.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
     out = [

@@ -176,11 +176,13 @@ def grad_bytes(params, ex: Optional[Exchange]) -> float:
     """Per-worker broadcast bytes of one compressed dual vector.
 
     The qgenx row models the production wire format — the bucket-fused
-    flat payload ``pmean_tree`` moves (per-leaf quantize_dequantize here
-    is the in-process simulation of the same per-coordinate math, so the
-    fused payload is the honest what-would-cross-the-network number).
-    Policy compressors (randk, layerwise) are accounted per leaf, exactly
-    matching what their ``compress_tree`` emits.
+    flat payload ``pmean_tree`` moves (the planned ``compress_tree``
+    above simulates the same per-coordinate math over the same fused
+    buffer, so this is the honest what-would-cross-the-network number).
+    Policy compressors delegate to ``compress_wire_bytes_tree``, which
+    matches their ``compress_tree`` emission exactly: per-leaf bytes for
+    randk, one shared padding tail per plan segment for layerwise under
+    the default ``use_plan`` (per-leaf when the plan is off).
     """
     n = sum(l.size for l in jax.tree_util.tree_leaves(params))
     if ex is None:

@@ -5,6 +5,9 @@ quantize.py / dequantize.py — pl.pallas_call kernels with in-kernel int4
   packing (the buffer a kernel emits is the wire payload)
 dequant_reduce.py — fused dequantize+mean (exchange consumer) and fused
   dequantize+mean+requantize (two-phase middle step)
+segment_quantize.py — segment-fused quantize∘dequantize over an
+  ExchangePlan flat buffer (per-row level tables via the SMEM-table
+  mechanism; one invocation replaces per-leaf launch pairs)
 ops.py — jitted wrappers matching repro.core.quantization's contract
 ref.py — pure-jnp oracle used by the allclose/bit-exact tests
 """
@@ -14,3 +17,6 @@ from repro.kernels.dequant_reduce import (  # noqa: F401
     dequant_reduce_requantize_blocks,
 )
 from repro.kernels.ops import dequantize_pallas, quantize_pallas  # noqa: F401
+from repro.kernels.segment_quantize import (  # noqa: F401
+    quantize_dequantize_segments,
+)

@@ -110,6 +110,69 @@ def dequant_rows(signed_idx, lv, norms):
     return vals * sign * norms[:, None]
 
 
+def segment_quant_dequant_rows(x, tables, seg, r, *, num_symbols,
+                               q_is_inf: bool, stochastic: bool = True):
+    """Fused Q∘DEQ over [rows, bucket] tiles with a PER-ROW level table.
+
+    The segment-fused twin of :func:`quant_rows` + :func:`dequant_rows`
+    (ExchangePlan): ``tables`` is the stacked ``[T, S_max]`` level-table
+    buffer (short tables right-padded with 1.0 — see
+    ``exchange_plan.stack_level_tables``), ``seg`` maps each bucket row
+    to its table, ``num_symbols`` is the static tuple of live symbol
+    counts per table.  One pass: row norms, normalization, a masked
+    compare-accumulate level search over the UNION of interior levels
+    (rows of shorter tables mask the surplus comparisons), per-table
+    SMEM-table gathers for the bracket endpoints, stochastic rounding
+    against ``r``, and the dequant value lookup — the payload indices
+    never materialize, so a planned ``compress_tree`` is one invocation
+    instead of a quantize + dequantize launch per leaf.
+
+    For T = 1 this is bit-identical to ``dequant_rows(quant_rows(...))``
+    with the same noise (same bracket math, same gathers).
+    """
+    norms = norm_rows(x, q_is_inf)
+    safe = jnp.where(norms > 0, norms, 1.0)
+    u = jnp.clip(jnp.abs(x) / safe[:, None], 0.0, 1.0)
+    s_max = tables.shape[1]
+    n_tables = len(num_symbols)
+    tau = jnp.zeros(u.shape, jnp.int32)
+    for j in range(1, s_max - 1):
+        # tables whose interior includes level j (static set — rows of
+        # shorter tables mask the surplus comparisons without any
+        # captured constant buffer, Pallas-kernel safe)
+        live = [t for t in range(n_tables) if j <= num_symbols[t] - 2]
+        if not live:
+            continue
+        lvj = jnp.take(tables[:, j], seg)  # [rows] — per-row level j
+        hit = (u >= lvj[:, None])
+        if len(live) < n_tables:
+            act = jnp.zeros(seg.shape, jnp.bool_)
+            for t in live:
+                act = act | (seg == t)
+            hit = hit & act[:, None]
+        tau += hit.astype(jnp.int32)
+
+    def table_take(idx):
+        # per-table 1-D SMEM gathers, masked per row — the existing
+        # SMEM-table mechanism, indexed by the segment table id
+        out = jnp.zeros(idx.shape, jnp.float32)
+        for t in range(n_tables):
+            m = (seg == t)[:, None]
+            out = jnp.where(m, jnp.take(tables[t], idx), out)
+        return out
+
+    lo = table_take(tau)
+    hi = table_take(tau + 1)
+    xi = (u - lo) / (hi - lo)
+    if stochastic:
+        up = (r < xi).astype(jnp.int32)
+    else:
+        up = (xi >= 0.5).astype(jnp.int32)
+    vals = table_take(tau + up)
+    signed = jnp.where(x < 0, -vals, vals)
+    return signed * norms[:, None]
+
+
 def quant_rows(x, lv, r, num_symbols: int, q_is_inf: bool):
     """Q: f32 [rows, bucket] -> (signed int32 indices, f32 row norms).
 

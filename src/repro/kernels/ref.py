@@ -46,6 +46,27 @@ def quantize_blocks_ref(
     return signed.astype(jnp.int8), norms
 
 
+def quantize_dequantize_segments_ref(
+    x2d: jax.Array,
+    noise: jax.Array,
+    tables: jax.Array,
+    seg_ids: jax.Array,
+    *,
+    num_symbols: tuple,
+    q_is_inf: bool,
+    stochastic: bool = True,
+):
+    """Reference for kernels.segment_quantize.quantize_dequantize_segments
+    (bit-exact under identical noise — both call the shared row math)."""
+    from repro.kernels.common import segment_quant_dequant_rows
+
+    return segment_quant_dequant_rows(
+        x2d.astype(jnp.float32), tables.astype(jnp.float32),
+        seg_ids.astype(jnp.int32), noise.astype(jnp.float32),
+        num_symbols=num_symbols, q_is_inf=q_is_inf, stochastic=stochastic,
+    )
+
+
 def dequantize_blocks_ref(
     idx2d: jax.Array, norms: jax.Array, levels: jax.Array, *, bits: int = 8
 ):

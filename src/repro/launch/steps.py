@@ -35,6 +35,16 @@ and ``qgenx`` — the paper's OWN adaptive-step-size extragradient
 half-step feedback carried in ``QGenXOptState.prev_half`` and pays ONE
 oracle call and one broadcast round per step.
 
+Every tree exchange this step performs — the gradient ``pmean_tree``
+calls of all optimizer branches AND the ``recenter_every`` parameter
+re-centering — routes through the compressor's static ExchangePlan
+(:mod:`repro.core.exchange_plan`, ``ExchangeConfig.use_plan``): the
+gradient pytree is packed ONCE into a tile-aligned flat buffer whose
+layout XLA sees unchanged every step (with the train CLI donating
+params/opt_state/ex_state, buffers are reused across steps rather than
+reallocated), bit-exact with the per-call concatenate+pad path it
+replaces.  ``--no-exchange-plan`` is the escape hatch.
+
 Local-update regime (``ExchangeConfig.sync_every = K``): workers take K
 local (extra)gradient steps between compressed exchanges.  The exchanges
 are gated behind ``lax.cond`` on the optimizer step counter, so collective

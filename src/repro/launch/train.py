@@ -88,6 +88,7 @@ def build_exchange_config(args, n_dev: int):
         rand_frac=args.rand_frac,
         sync_every=args.sync_every,
         recenter_every=args.recenter_every,
+        use_plan=not args.no_exchange_plan,
     )
 
 
@@ -117,6 +118,10 @@ def main(argv=None):
                     choices=("two_phase", "gather", "leafwise"))
     ap.add_argument("--use-pallas", action="store_true",
                     help="route the exchange through the fused Pallas kernels")
+    ap.add_argument("--no-exchange-plan", action="store_true",
+                    help="escape hatch: per-call exchange layout instead of "
+                         "the static ExchangePlan flat buffer (bit-exact for "
+                         "qgenx/layerwise pmean either way; DESIGN.md §1.5)")
     ap.add_argument("--level-schedule", default="fixed",
                     choices=("fixed", "qada"))
     ap.add_argument("--level-update-every", type=int, default=0,
@@ -163,7 +168,8 @@ def main(argv=None):
               f"mode={ex_cfg.mode} axis={ex_cfg.axis_name} "
               f"use_pallas={ex_cfg.use_pallas} schedule={ex_cfg.level_schedule} "
               f"sync_every={ex_cfg.sync_every} "
-              f"recenter_every={ex_cfg.recenter_every}",
+              f"recenter_every={ex_cfg.recenter_every} "
+              f"plan={ex_cfg.use_plan}",
               flush=True)
     if args.optimizer == "qgenx":
         print(f"[train] qgenx method={args.method}", flush=True)
@@ -173,7 +179,12 @@ def main(argv=None):
     dp = NamedSharding(mesh, P("data"))
     batch_sharding = {"tokens": NamedSharding(mesh, P("data", None)),
                       "labels": NamedSharding(mesh, P("data", None))}
-    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    # donate ALL carried state — params, opt_state AND ex_state — so XLA
+    # reuses the buffers (incl. the plan's flat exchange scratch) across
+    # steps instead of allocating fresh ones; the step returns each tree
+    # with identical structure, and checkpointing copies host-side before
+    # the next call invalidates the donated inputs
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
 
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     pipe = make_pipeline(cfg, shape, seed=args.seed)
@@ -215,11 +226,17 @@ def main(argv=None):
         params, opt_state, ex_state, metrics = jitted(
             params, opt_state, ex_state, batch, jax.random.fold_in(key, step)
         )
-        loss = float(metrics["loss"])
-        wire = float(metrics["wire_bytes"])
-        drift = float(metrics["param_drift"])
-        coded = float(metrics["coded_bits_est"])
+        # fence the async dispatch for honest step timing WITHOUT moving
+        # the metrics: device->host transfers (the float() fetches) are
+        # blocking round-trips and are only paid on log steps
+        jax.block_until_ready(metrics["loss"])
         times.append(time.time() - t0)
+        is_last = step == args.steps - 1
+        if step % args.log_every == 0 or is_last:
+            loss = float(metrics["loss"])
+            wire = float(metrics["wire_bytes"])
+            drift = float(metrics["param_drift"])
+            coded = float(metrics["coded_bits_est"])
         if step % args.log_every == 0:
             tail = f" drift={drift:.3e}" if args.sync_every > 1 else ""
             if coded:
@@ -234,6 +251,12 @@ def main(argv=None):
                 {"params": params, "opt_state": opt_state,
                  "ex_state": ex_state},
             )
+    if not times:  # restored checkpoint already at/past --steps: nothing
+        # ran, so save NOTHING — a save here would rewind the checkpoint
+        # 'latest' pointer below the restored step
+        print(f"[train] done. no steps run (restored step {start_step} "
+              f">= --steps {args.steps})")
+        return None
     if args.checkpoint_dir:
         checkpointing.save(
             args.checkpoint_dir, args.steps,

@@ -101,7 +101,9 @@ class QGenXOptState(NamedTuple):
 
 def init_qgenx_state(cfg: OptimizerConfig, params) -> QGenXOptState:
     # jnp.copy (not astype): the anchor must be a fresh buffer, never an
-    # alias of f32 params — trainers donate params and opt_state together
+    # alias of f32 params — trainers donate ALL carried state (params,
+    # opt_state and ex_state, see launch/train.py), so any aliasing here
+    # would hand XLA the same buffer twice under donation
     f32 = lambda p: jnp.copy(p).astype(jnp.float32)  # noqa: E731
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
     method = get_method(cfg.method)
