@@ -1316,6 +1316,43 @@ class LayerwiseCompressor(Compressor):
 
 
 # ---------------------------------------------------------------------------
+# Partial participation (liveness masking)
+# ---------------------------------------------------------------------------
+
+
+def _mask_tree(tree, mask: Array):
+    """Zero every leaf of a DEAD worker (mask == 0) via ``jnp.where`` —
+    NOT a multiply, so a dropped worker's non-finite payload (NaN * 0 is
+    NaN) still vanishes from the aggregate.  ``where(1 > 0, g, 0)`` is
+    ``g`` bitwise, which is what keeps the all-ones mask exact."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.where(mask > 0, g, jnp.zeros((), g.dtype)), tree
+    )
+
+
+def _alive_renorm(mask: Array, axis_name) -> tuple:
+    """(renorm, alive): the mean-over-K -> mean-over-alive correction.
+
+    psum(masked payload) / psum(mask) is an unbiased mean over the
+    SURVIVORS; every pmean below computes psum/K, so the correction is
+    K / alive.  ``alive`` is clamped at 1 so an (unsupported) all-dead
+    step yields zeros instead of NaN — the step guard, not the exchange,
+    owns rejecting that step.  With an all-ones mask alive == K exactly
+    (a psum of exact 1.0s), renorm == 1.0, and x * 1.0 is bitwise x —
+    the parity the fault tests pin across the bits x mode grid.
+    """
+    axis_size = jax.lax.psum(1, axis_name)
+    alive = jnp.maximum(jax.lax.psum(mask.astype(jnp.float32), axis_name), 1.0)
+    return jnp.float32(axis_size) / alive, alive
+
+
+def _renorm_tree(tree, renorm: Array):
+    return jax.tree_util.tree_map(
+        lambda m: (m.astype(jnp.float32) * renorm).astype(m.dtype), tree
+    )
+
+
+# ---------------------------------------------------------------------------
 # The Exchange object
 # ---------------------------------------------------------------------------
 
@@ -1431,34 +1468,71 @@ class Exchange:
     # -- exchanges -----------------------------------------------------
 
     def pmean(self, x: Array, state: ExchangeState, key: Array,
-              axis_index=None):
+              axis_index=None, mask: Optional[Array] = None):
         """Unbiased mean of a flat vector over the exchange axis.
 
         ``axis_index`` (optional traced scalar) supplies this device's
         position along the exchange axis for per-device key derivation on
         partially-manual meshes where ``lax.axis_index`` cannot lower
         (see :func:`_axis_key`); byte-identical when the value matches.
+
+        ``mask`` (optional traced 0/1 scalar, one per device) is the
+        PARTIAL-PARTICIPATION hook: a device with ``mask == 0`` is
+        excluded from the aggregate — its payload is where-zeroed before
+        quantization and the result is renormalized by ``K / psum(mask)``,
+        i.e. psum(masked payloads) / psum(mask): an unbiased mean over
+        the alive set, for every compressor in the registry.  ``None``
+        (default) keeps the exact pre-mask jaxpr; an all-ones mask is
+        bit-exact with it (see :func:`_alive_renorm`).  Dropped devices
+        still participate in the collectives (this is algorithm-level
+        dropout simulation inside one SPMD program — a real communicator
+        shrink is a launcher concern), but the WIRE accounting the train
+        step emits prices only alive workers.
         """
+        if mask is not None:
+            x = jnp.where(mask > 0, x, jnp.zeros((), x.dtype))
         mean = self.compressor.pmean(x, self.cfg, state, key, axis_index)
         hist = self._flat_hist(x) if self._qada_active() else None
-        return mean, self._advance(state, hist)
+        return self._finish(mean, state, hist, mask)
 
     def pmean_tree(self, tree, state: ExchangeState, key: Array,
-                   axis_index=None):
-        """Unbiased mean of a gradient pytree (bucket-fused / per policy)."""
+                   axis_index=None, mask: Optional[Array] = None):
+        """Unbiased mean of a gradient pytree (bucket-fused / per policy).
+
+        ``mask`` excludes this device from the aggregate (renormalized
+        over the alive set — see :meth:`pmean`)."""
         if self.cfg.mode == "leafwise":
-            return self.pmean_leafwise(tree, state, key, axis_index)
+            return self.pmean_leafwise(tree, state, key, axis_index, mask)
+        if mask is not None:
+            tree = _mask_tree(tree, mask)
         mean = self.compressor.pmean_tree(tree, self.cfg, state, key, axis_index)
         hist = self._tree_hist(tree) if self._qada_active() else None
-        return mean, self._advance(state, hist)
+        return self._finish(mean, state, hist, mask)
 
     def pmean_leafwise(self, tree, state: ExchangeState, key: Array,
-                       axis_index=None):
+                       axis_index=None, mask: Optional[Array] = None):
         """Sharding-preserving per-leaf exchange (production mesh)."""
         cfg = dataclasses.replace(self.cfg, mode="leafwise")
         self.compressor.validate(cfg)  # loud, not a silent flat fallback
+        if mask is not None:
+            tree = _mask_tree(tree, mask)
         mean = self.compressor.pmean_tree(tree, cfg, state, key, axis_index)
         hist = self._leafwise_hist(tree) if self._qada_active() else None
+        return self._finish(mean, state, hist, mask)
+
+    def _finish(self, mean, state: ExchangeState, hist, mask):
+        """Common masked-exchange epilogue: renormalize the mean over the
+        alive set and keep dead workers out of the QAda statistics (their
+        where-zeroed payload would otherwise pile histogram mass at 0 and
+        skew every future level table)."""
+        if mask is not None:
+            renorm, _ = _alive_renorm(mask, self.cfg.axis_name)
+            mean = _renorm_tree(mean, renorm)
+            if hist is not None:
+                # where, not multiply: a dead worker's stats may be NaN
+                # (that can be WHY it was dropped) and NaN * 0 is NaN —
+                # it must not poison the psum-merged QAda state
+                hist = jnp.where(mask > 0, hist, jnp.zeros_like(hist))
         return mean, self._advance(state, hist)
 
     # -- collective-free per-worker compression ------------------------

@@ -1,0 +1,341 @@
+"""Fault injection + the host-side guard runtime (the fault-tolerance layer).
+
+The runtime used to assume every worker is always alive, every gradient is
+finite, and every checkpoint write completes.  This module is the seam
+that drops those assumptions — and, just as important, the seam that lets
+tests EXERCISE every guard instead of merely shipping it:
+
+* :class:`FaultSpec` — a deterministic, seed-free fault schedule parsed
+  from one string (the train CLI's ``--fault-spec``).  Device-side faults
+  (NaN-poisoned gradients, dropped workers, corrupted wire buffers) are
+  traced predicates of ``(step, worker)`` — static Python event lists
+  compiled into the jitted step, so the same spec replays bit-identically
+  run after run.  Host-side faults (truncated / torn checkpoint files)
+  are applied by :func:`inject_ckpt_fault` between steps.
+* :func:`tree_all_finite` — the all-leaves finiteness flag the step guard
+  psums across devices (:mod:`repro.launch.steps`, ``guard=True``).
+* :class:`Watchdog` — the host-side companion of the traced step guard:
+  keeps a last-known-good snapshot of the carried state and decides when
+  K consecutive rejections (or a high rejection rate over a trailing
+  window) warrant rolling the run back to it.
+
+Grammar of a fault spec (events joined by ``;``)::
+
+    kind@STEP[-END][:worker=I]
+
+    nan_grad@5:worker=2        NaN-poison worker 2's local gradients at step 5
+    drop@8-10:worker=3         worker 3 drops out of the exchange, steps 8-10
+    wire_corrupt@6             corrupt the exchanged aggregate at step 6
+    ckpt_truncate@12           truncate the npz written for step 12 (torn write)
+    ckpt_drop_meta@12          delete the meta written for step 12
+    ckpt_garbage_latest@12     scribble garbage over the ``latest`` pointer
+
+Step indices refer to the TRAIN-LOOP step (the value the train loop
+passes as ``fault_step``), not the optimizer's ``count`` — a rejected
+step does not advance ``count``, and a schedule keyed on it would re-fire
+the same fault forever.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# device-side kinds are compiled into the traced step; host-side (ckpt_*)
+# kinds are applied between steps by inject_ckpt_fault
+DEVICE_KINDS = ("nan_grad", "drop", "wire_corrupt")
+HOST_KINDS = ("ckpt_truncate", "ckpt_drop_meta", "ckpt_garbage_latest")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: ``kind`` active for steps [start, end],
+    optionally scoped to one worker (None = every worker)."""
+
+    kind: str
+    start: int
+    end: int
+    worker: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """A static (frozen, hashable) fault schedule.
+
+    Build with :meth:`parse`; thread into ``make_train_step(...,
+    fault_spec=spec)``.  Every query helper is a no-op returning its
+    input unchanged when the spec holds no events of the relevant kind —
+    the jaxpr (and therefore the numerics) of a fault-free run is
+    untouched by an empty spec.
+    """
+
+    events: tuple = ()
+
+    @classmethod
+    def parse(cls, text: Optional[str]) -> "FaultSpec":
+        """``"nan_grad@5:worker=2;drop@8-10:worker=3"`` -> FaultSpec.
+
+        Unknown kinds, malformed steps, or missing ``@`` raise ValueError
+        naming the offending event (fault schedules are test/CI inputs —
+        they must fail loudly, not inject nothing).
+        """
+        if not text:
+            return cls(())
+        events = []
+        for raw in text.split(";"):
+            raw = raw.strip()
+            if not raw:
+                continue
+            if "@" not in raw:
+                raise ValueError(f"fault event {raw!r} has no '@STEP'")
+            kind, _, rest = raw.partition("@")
+            kind = kind.strip()
+            if kind not in DEVICE_KINDS + HOST_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {kind!r}; known: "
+                    f"{DEVICE_KINDS + HOST_KINDS}"
+                )
+            steps, _, opts = rest.partition(":")
+            worker = None
+            if opts:
+                k, _, v = opts.partition("=")
+                if k.strip() != "worker":
+                    raise ValueError(f"unknown fault option {opts!r} in {raw!r}")
+                worker = int(v)
+            lo, _, hi = steps.partition("-")
+            try:
+                start = int(lo)
+                end = int(hi) if hi else start
+            except ValueError:
+                raise ValueError(f"bad step range {steps!r} in {raw!r}") from None
+            if end < start:
+                raise ValueError(f"empty step range {steps!r} in {raw!r}")
+            events.append(FaultEvent(kind, start, end, worker))
+        return cls(tuple(events))
+
+    # -- queries ---------------------------------------------------------
+
+    def of_kind(self, kind: str) -> tuple:
+        return tuple(e for e in self.events if e.kind == kind)
+
+    def has(self, kind: str) -> bool:
+        return any(e.kind == kind for e in self.events)
+
+    @property
+    def has_device_events(self) -> bool:
+        """True when the traced step needs the ``fault_step`` argument."""
+        return any(e.kind in DEVICE_KINDS for e in self.events)
+
+    def ckpt_faults_at(self, step: int) -> tuple:
+        """Host-side fault kinds scheduled for the checkpoint at ``step``."""
+        return tuple(
+            e.kind for e in self.events
+            if e.kind in HOST_KINDS and e.start <= step <= e.end
+        )
+
+    # -- traced injectors (compiled into the step) ----------------------
+
+    def _active(self, events, step: Array, worker_ix=None) -> Array:
+        """Traced bool: any of ``events`` active at (step, worker)."""
+        hit = jnp.bool_(False)
+        for e in events:
+            on = (step >= e.start) & (step <= e.end)
+            if e.worker is not None:
+                wix = jnp.int32(0) if worker_ix is None else worker_ix
+                on = on & (wix == e.worker)
+            hit = hit | on
+        return hit
+
+    def liveness(self, step: Array, worker_ix) -> Optional[Array]:
+        """f32 scalar: 0.0 while this worker is dropped, 1.0 otherwise.
+
+        Returns None (Python-level) when the spec has no ``drop`` events,
+        so fault-free paths keep their exact unmasked jaxpr.
+        """
+        events = self.of_kind("drop")
+        if not events:
+            return None
+        dead = self._active(events, step, worker_ix)
+        return jnp.where(dead, jnp.float32(0.0), jnp.float32(1.0))
+
+    def poison_grads(self, tree, step: Array, worker_ix):
+        """NaN-poison every gradient leaf while a ``nan_grad`` event is
+        active for this (step, worker) — the loss-spike / bad-batch
+        failure mode the step guard must reject."""
+        events = self.of_kind("nan_grad")
+        if not events:
+            return tree
+        bad = self._active(events, step, worker_ix)
+        poison = jnp.where(bad, jnp.float32(jnp.nan), jnp.float32(0.0))
+        return jax.tree_util.tree_map(lambda g: g + poison.astype(g.dtype), tree)
+
+    def corrupt_mean(self, tree, step: Array):
+        """Inject Inf into the EXCHANGED aggregate while a ``wire_corrupt``
+        event is active: a corrupted wire buffer poisons every worker's
+        copy of the mean (broadcast semantics), so the injection is
+        deliberately un-scoped to a worker."""
+        events = self.of_kind("wire_corrupt")
+        if not events:
+            return tree
+        bad = self._active(events, step)
+        poison = jnp.where(bad, jnp.float32(jnp.inf), jnp.float32(0.0))
+        return jax.tree_util.tree_map(lambda g: g + poison.astype(g.dtype), tree)
+
+
+def tree_all_finite(*trees) -> Array:
+    """Traced bool: every float leaf of every tree is finite.
+
+    Integer/bool leaves (step counters) are skipped — they cannot encode
+    NaN/Inf.  This is the local flag the step guard psums across devices:
+    one non-finite coordinate on ONE alive worker rejects the step fleet-
+    wide (the exchanged aggregate already poisoned everyone).
+    """
+    flags = []
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+                flags.append(jnp.all(jnp.isfinite(leaf)))
+    if not flags:
+        return jnp.bool_(True)
+    out = flags[0]
+    for f in flags[1:]:
+        out = out & f
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Host-side checkpoint fault injection (simulated crashes / torn writes)
+# ---------------------------------------------------------------------------
+
+
+def inject_ckpt_fault(path: str, step: int, kind: str) -> None:
+    """Corrupt the on-disk checkpoint for ``step`` the way a crash would.
+
+    ``ckpt_truncate``: chop the npz in half — a torn write / disk
+    corruption that the per-array crc32 in the meta must catch.
+    ``ckpt_drop_meta``: delete the meta — the npz landed but the process
+    died before the meta (the atomic-write ordering makes this the only
+    observable partial state besides a stale ``latest``).
+    ``ckpt_garbage_latest``: scribble over the ``latest`` pointer —
+    ``latest_step`` must answer None, not raise.
+    """
+    if kind == "ckpt_truncate":
+        p = os.path.join(path, f"ckpt_{step}.npz")
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:
+            f.truncate(max(1, size // 2))
+    elif kind == "ckpt_drop_meta":
+        os.remove(os.path.join(path, f"ckpt_{step}.meta"))
+    elif kind == "ckpt_garbage_latest":
+        with open(os.path.join(path, "latest"), "w") as f:
+            f.write("not-a-step\n")
+    else:
+        raise ValueError(f"unknown checkpoint fault {kind!r}; known: {HOST_KINDS}")
+
+
+# ---------------------------------------------------------------------------
+# Host-side watchdog (rollback policy for the traced step guard)
+# ---------------------------------------------------------------------------
+
+
+class Watchdog:
+    """Keeps a last-known-good snapshot; decides when to roll back.
+
+    The traced step guard (``make_train_step(..., guard=True)``) rejects
+    individual non-finite steps in-graph — params/opt_state/ex_state carry
+    through unchanged.  The watchdog handles what the graph cannot: a run
+    that KEEPS rejecting (a poisoned replica, corrupted optimizer state
+    that passes the finite check, a divergence spiral) is rolled back to
+    the newest snapshot taken while the run was healthy.
+
+    Triggers (either):
+
+    * ``rollback_after`` consecutive rejected steps, or
+    * at least ``divergence_rate`` of the last ``window`` steps rejected
+      (default window: 4 x rollback_after — catches intermittent
+      rejection storms that never run K-in-a-row).
+
+    The snapshot is a host-side (numpy) copy, so it survives donated
+    device buffers; ``record_good`` must be called AFTER fetching step
+    outputs and BEFORE the next jitted call invalidates them (the same
+    rule train checkpointing already follows)::
+
+        wd = Watchdog(rollback_after=3)
+        wd.record_good(0, {"params": params, ...})
+        ...
+        if wd.observe(step, rejected, nonfinite):
+            snap_step, trees = wd.rollback()
+    """
+
+    def __init__(self, rollback_after: int = 3, divergence_rate: float = 0.5,
+                 window: Optional[int] = None):
+        if rollback_after < 1:
+            raise ValueError(f"rollback_after must be >= 1, got {rollback_after}")
+        if not (0.0 < divergence_rate <= 1.0):
+            raise ValueError(
+                f"divergence_rate must be in (0, 1], got {divergence_rate}"
+            )
+        self.rollback_after = rollback_after
+        self.divergence_rate = divergence_rate
+        self.window = window if window is not None else 4 * rollback_after
+        self._recent: collections.deque = collections.deque(maxlen=self.window)
+        self._snapshot = None  # (step, {name: host tree})
+        self.consecutive = 0
+        self.rejected_steps = 0
+        self.nonfinite_steps = 0
+        self.rollbacks = 0
+
+    @property
+    def has_snapshot(self) -> bool:
+        return self._snapshot is not None
+
+    @property
+    def snapshot_step(self) -> Optional[int]:
+        return self._snapshot[0] if self._snapshot else None
+
+    def record_good(self, step: int, trees: dict) -> None:
+        """Snapshot the carried state (host copies) as last-known-good."""
+        self._snapshot = (int(step), jax.tree_util.tree_map(
+            lambda x: np.array(x), trees
+        ))
+
+    def observe(self, step: int, rejected: bool, nonfinite: bool) -> bool:
+        """Record one step's guard verdict; True = the caller should roll
+        back now (and a snapshot exists to roll back to)."""
+        self._recent.append(bool(rejected))
+        if nonfinite:
+            self.nonfinite_steps += 1
+        if rejected:
+            self.rejected_steps += 1
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+        if not self.has_snapshot:
+            return False
+        if self.consecutive >= self.rollback_after:
+            return True
+        if (len(self._recent) == self.window
+                and sum(self._recent) / self.window >= self.divergence_rate):
+            return True
+        return False
+
+    def rollback(self):
+        """Return (snapshot_step, device trees) and reset the triggers."""
+        assert self._snapshot is not None, "no snapshot to roll back to"
+        self.rollbacks += 1
+        self.consecutive = 0
+        self._recent.clear()
+        step, host_trees = self._snapshot
+        return step, jax.tree_util.tree_map(jnp.asarray, host_trees)
+
+    def summary(self) -> str:
+        return (f"nonfinite_steps={self.nonfinite_steps} "
+                f"rejected={self.rejected_steps} rollbacks={self.rollbacks}")

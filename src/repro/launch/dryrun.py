@@ -236,7 +236,9 @@ def lower_combo(
         )
         ex_sharding = jax.tree_util.tree_map(lambda _: repl, ex_struct)
         metric_sharding = {"loss": repl, "wire_bytes": repl,
-                           "param_drift": repl, "coded_bits_est": repl}
+                           "param_drift": repl, "coded_bits_est": repl,
+                           "rejected": repl, "nonfinite": repl,
+                           "alive": repl}
         jitted = jax.jit(
             step,
             in_shardings=(param_sharding, opt_sharding, ex_sharding,

@@ -64,6 +64,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core import faults as faults_mod
 from repro.core.exchange import (
     Exchange,
     ExchangeConfig,
@@ -123,6 +124,8 @@ def make_train_step(
     compress_axis: Optional[str] = None,  # deprecated: use exchange=
     compress_mode: str = "two_phase",  # deprecated: use exchange=
     mesh=None,
+    guard: bool = False,
+    fault_spec: Optional[faults_mod.FaultSpec] = None,
 ):
     """Returns step(params, opt_state, ex_state, batch, key)
     -> (params, opt_state, ex_state, metrics).
@@ -133,10 +136,36 @@ def make_train_step(
     to GSPMD via ``auto``).  ``ex_state`` is the ExchangeState from
     ``make_exchange(cfg).init_state()`` (or ``null_exchange_state()`` when
     no exchange is configured — the signature is uniform either way).
+
+    ``guard=True`` arms the NON-FINITE STEP GUARD: the candidate update is
+    computed as usual, an all-float-leaves finiteness flag over
+    (loss, new params, new optimizer state, new exchange state) is psum'd
+    across the exchange axis, and a ``lax.cond`` carries
+    params/opt_state/ex_state through UNCHANGED when any alive worker saw
+    a non-finite value — including the exchange-call counter, so a
+    rejected step does not advance ``sync_every`` gating, the QAda
+    histogram/refresh cadence, the re-centering cadence, or (qgenx
+    ``optda``) the carried ``prev_half`` half-step feedback.  Metrics gain
+    ``rejected`` (1.0 = this step was rejected), ``nonfinite`` (1.0 = ANY
+    worker, alive or dropped, produced a non-finite candidate) and
+    ``alive`` (workers contributing to the aggregate).  The guard prices
+    one ``isfinite`` pass over the carried state per step; ``guard=False``
+    (default) keeps the exact unguarded jaxpr.
+
+    ``fault_spec`` (a :class:`repro.core.faults.FaultSpec`) compiles a
+    deterministic fault schedule into the step: NaN-poisoned local
+    gradients, dropped workers (threaded into the exchange as a liveness
+    mask — the aggregate renormalizes over the alive set), and corrupted
+    wire buffers.  When the spec carries device events the returned step
+    takes ONE extra trailing argument ``fault_step`` (traced int32: the
+    train-loop step the schedule is keyed on)::
+
+        step(params, opt_state, ex_state, batch, key, fault_step)
     """
     if exchange is None:
         exchange = _legacy_exchange_config(quant, compress_axis, compress_mode)
     ex = make_exchange(exchange) if isinstance(exchange, ExchangeConfig) else exchange
+    needs_fault_step = fault_spec is not None and fault_spec.has_device_events
 
     if opt_cfg.name == "qgenx" and get_method(opt_cfg.method).name not in (
         "de", "optda",
@@ -175,7 +204,8 @@ def make_train_step(
         msd = jax.lax.pmean(jnp.mean((probe - mean) ** 2), axis_name)
         return jnp.sqrt(msd)
 
-    def core_step(params, opt_state, ex_state, batch, key, axis_ix=None):
+    def core_step(params, opt_state, ex_state, batch, key, axis_ix=None,
+                  fault_step=None):
         k1, k2 = jax.random.split(key)
         st_in = ex_state
         # device position along the exchange axis: a [1] slice of a
@@ -183,6 +213,19 @@ def make_train_step(
         # meshes cannot lower lax.axis_index — see exchange._axis_key);
         # the exchange falls back to lax.axis_index when None
         ix = axis_ix[0] if axis_ix is not None else None
+        # fault schedule (when armed): traced predicates of the train-loop
+        # step + this worker's position.  mask is None when the spec has
+        # no drop events — the exchange keeps its exact unmasked jaxpr.
+        mask = None
+        if needs_fault_step:
+            wix = ix if ix is not None else jnp.int32(0)
+            mask = fault_spec.liveness(fault_step, wix)
+
+            def gfn(p, b):
+                loss, g = grad_fn(p, b)
+                return loss, fault_spec.poison_grads(g, fault_step, wix)
+        else:
+            gfn = grad_fn
         # local-update gating: exchanges only fire on every sync_every-th
         # optimizer step (the counter rides in every optimizer's state)
         if sync_every > 1:
@@ -193,23 +236,29 @@ def make_train_step(
         def exchange_grads(grads, ex_state, key):
             if ex is None:
                 return grads, ex_state  # XLA's exact psum handles it
+
             # pmean_tree routes mode="leafwise" to the sharding-preserving
             # per-leaf path internally (production mesh: inner axes auto)
+            def _do(g, st, k):
+                m, st = ex.pmean_tree(g, st, k, ix, mask=mask)
+                if needs_fault_step:
+                    m = fault_spec.corrupt_mean(m, fault_step)
+                return m, st
+
             if is_sync is None:
-                return ex.pmean_tree(grads, ex_state, key, ix)
+                return _do(grads, ex_state, key)
             return jax.lax.cond(
-                is_sync,
-                lambda g, st, k: ex.pmean_tree(g, st, k, ix),
+                is_sync, _do,
                 lambda g, st, k: (g, st),
                 grads, ex_state, key,
             )
 
         n_workers = jax.lax.psum(1, axis_name) if ex is not None else 1
         if opt_cfg.name == "extra_adam":
-            loss1, g1 = grad_fn(params, batch)
+            loss1, g1 = gfn(params, batch)
             g1, ex_state = exchange_grads(g1, ex_state, k1)
             params_half = opt.extrapolate(opt_cfg, params, opt_state, g1)
-            loss, g2 = grad_fn(params_half, batch)
+            loss, g2 = gfn(params_half, batch)
             g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
         elif opt_cfg.name == "qgenx" and get_method(opt_cfg.method).uses_prev_half:
@@ -220,7 +269,7 @@ def make_train_step(
             params_half = qgenx_opt.extrapolate(
                 opt_cfg, params, opt_state, ghat1, n_workers
             )
-            loss, g2 = grad_fn(params_half, batch)
+            loss, g2 = gfn(params_half, batch)
             ghat2, ex_state = exchange_grads(g2, ex_state, k2)
             # sum_k ||Vbar_{t} - g_{k,t+1/2}||^2 — the carried feedback vs
             # this worker's fresh half-step oracle (at K=1 uncompressed
@@ -237,12 +286,12 @@ def make_train_step(
             # de (Example 3.2) — the paper's Algorithm 1 on the model:
             # extragradient with the adaptive gamma rule (statistics in
             # the QGenXOptState pytree)
-            loss1, g1 = grad_fn(params, batch)
+            loss1, g1 = gfn(params, batch)
             ghat1, ex_state = exchange_grads(g1, ex_state, k1)
             params_half = qgenx_opt.extrapolate(
                 opt_cfg, params, opt_state, ghat1, n_workers
             )
-            loss, g2 = grad_fn(params_half, batch)
+            loss, g2 = gfn(params_half, batch)
             ghat2, ex_state = exchange_grads(g2, ex_state, k2)
             # sum_k ||g_{k,t} - g_{k,t+1/2}||^2 — the gamma-rule statistic
             sq = qgenx_opt.local_sq_diff(g1, g2)
@@ -255,11 +304,11 @@ def make_train_step(
         elif opt_cfg.name == "optimistic_adam":
             prev = opt_state.prev_half_grad
             params_half = opt.extrapolate(opt_cfg, params, opt_state, prev)
-            loss, g2 = grad_fn(params_half, batch)
+            loss, g2 = gfn(params_half, batch)
             g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.commit(opt_cfg, params, opt_state, g2)
         else:  # adam baseline
-            loss, g2 = grad_fn(params, batch)
+            loss, g2 = gfn(params, batch)
             g2, ex_state = exchange_grads(g2, ex_state, k2)
             new_params, new_state = opt.adam_step(opt_cfg, params, opt_state, g2)
 
@@ -282,7 +331,7 @@ def make_train_step(
             if opt_cfg.name == "qgenx":
                 def _recenter(args):
                     p, st, exst = args
-                    y_bar, exst = ex.pmean_tree(st.y, exst, k3, ix)
+                    y_bar, exst = ex.pmean_tree(st.y, exst, k3, ix, mask=mask)
                     gamma = adaptive_gamma(
                         st.sum_sq, n_workers, opt_cfg.gamma_scale
                     )
@@ -291,7 +340,7 @@ def make_train_step(
             else:
                 def _recenter(args):
                     p, st, exst = args
-                    p_bar, exst = ex.pmean_tree(p, exst, k3, ix)
+                    p_bar, exst = ex.pmean_tree(p, exst, k3, ix, mask=mask)
                     return p_bar, st, exst
 
             new_params, new_state, ex_state = jax.lax.cond(
@@ -300,6 +349,7 @@ def make_train_step(
             )
         drift = jnp.float32(0.0)
         coded = jnp.float32(0.0)
+        alive_m = jnp.float32(1.0)
         if ex is not None:
             loss = jax.lax.pmean(loss, axis_name)  # replicated metric
             # analytic per-exchange operand bytes (static shapes) times the
@@ -311,6 +361,15 @@ def make_train_step(
             per_call = ex.wire_bytes_tree(g2, axis_size)
             n_calls = (ex_state.step - st_in.step).astype(jnp.float32)
             wire = jnp.float32(per_call) * n_calls
+            alive_m = jnp.float32(axis_size)
+            if mask is not None:
+                # partial participation: only alive workers transmit — the
+                # fleet's wire bill this step is alive/K of the full one.
+                # (coded_bits_est stays per-worker/unscaled by design: it
+                # estimates what ONE worker's broadcasts would entropy-code
+                # to, not fleet traffic.)
+                alive_m = jax.lax.psum(mask, axis_name)
+                wire = wire * (alive_m / jnp.float32(axis_size))
             # Theorem 2 entropy-coded wire estimate (Section 3.2): what
             # one worker's GRADIENT broadcasts would cost under CODE o Q
             # with an optimal prefix code, alongside the fixed-width
@@ -342,12 +401,59 @@ def make_train_step(
                 wire = wire + jnp.float32(probe_bytes) * is_sync.astype(jnp.float32)
         else:
             wire = jnp.float32(0.0)
+        rejected = jnp.float32(0.0)
+        nonfin = jnp.float32(0.0)
+        if guard:
+            # non-finite step guard: the candidate update is fully
+            # computed above; a single all-float-leaves finiteness flag
+            # over (loss, params', opt_state', ex_state') is psum'd and
+            # the lax.cond below carries the INPUT state through on
+            # rejection — including st_in, so a rejected step advances no
+            # exchange-call counter (sync_every gating, QAda hist/refresh
+            # cadence, recenter cadence) and, for optda, keeps the
+            # pre-step prev_half feedback.
+            ok_local = faults_mod.tree_all_finite(
+                loss, new_params, new_state, ex_state
+            )
+            bad = (~ok_local).astype(jnp.float32)
+            if ex is not None:
+                # a dropped worker cannot veto the fleet's step (its local
+                # candidate never entered the aggregate), but it still
+                # shows up in the nonfinite diagnostic
+                bad_alive = bad * mask if mask is not None else bad
+                nonfin_any = jax.lax.psum(bad, axis_name)
+                ok = jax.lax.psum(bad_alive, axis_name) == 0
+            else:
+                nonfin_any = bad
+                ok = bad == 0
+            nonfin = (nonfin_any > 0).astype(jnp.float32)
+            new_params, new_state, ex_state = jax.lax.cond(
+                ok,
+                lambda t: (t[0], t[1], t[2]),
+                lambda t: (t[3], t[4], t[5]),
+                (new_params, new_state, ex_state, params, opt_state, st_in),
+            )
+            rejected = jnp.float32(1.0) - ok.astype(jnp.float32)
+            # a rejected candidate's entropy estimate is an estimate of
+            # garbage (NaN pmf): keep the metric stream finite.  wire is
+            # NOT zeroed — the candidate's exchange really moved bytes.
+            coded = jnp.where(jnp.isfinite(coded), coded, jnp.float32(0.0))
         metrics = {"loss": loss, "wire_bytes": wire, "param_drift": drift,
-                   "coded_bits_est": coded}
+                   "coded_bits_est": coded, "rejected": rejected,
+                   "nonfinite": nonfin, "alive": alive_m}
         return new_params, new_state, ex_state, metrics
 
     if ex is None:
-        return core_step
+        if not needs_fault_step:
+            return core_step
+
+        def plain_step(params, opt_state, ex_state, batch, key, fault_step):
+            return core_step(
+                params, opt_state, ex_state, batch, key,
+                fault_step=jnp.asarray(fault_step, jnp.int32),
+            )
+
+        return plain_step
 
     assert mesh is not None, "compressed training needs the mesh for shard_map"
 
@@ -359,22 +465,31 @@ def make_train_step(
     # the exchange axis WITHOUT lax.axis_index (whose partition-id
     # lowering the SPMD partitioner rejects on partially-manual meshes);
     # the folded value is identical, so so are all downstream bytes.
-    def sharded_step(params, opt_state, ex_state, batch, key):
+    metric_specs = {"loss": P(), "wire_bytes": P(), "param_drift": P(),
+                    "coded_bits_est": P(), "rejected": P(), "nonfinite": P(),
+                    "alive": P()}
+
+    def sharded_step(params, opt_state, ex_state, batch, key, fault_step=None):
         batch_specs = {
             k: P(axis_name, *([None] * (v.ndim - 1))) for k, v in batch.items()
         }
         axis_ix = jnp.arange(mesh.shape[axis_name], dtype=jnp.int32)
+        in_specs = [P(), P(), P(), batch_specs, P(), P(axis_name)]
+        args = [params, opt_state, ex_state, batch, key, axis_ix]
+        if needs_fault_step:
+            # the fault schedule's clock: replicated traced int32 — no
+            # recompile per step
+            in_specs.append(P())
+            args.append(jnp.asarray(fault_step, jnp.int32))
         fn = shard_map(
             core_step,
             mesh=mesh,
-            in_specs=(P(), P(), P(), batch_specs, P(), P(axis_name)),
-            out_specs=(P(), P(), P(),
-                       {"loss": P(), "wire_bytes": P(), "param_drift": P(),
-                        "coded_bits_est": P()}),
+            in_specs=tuple(in_specs),
+            out_specs=(P(), P(), P(), metric_specs),
             check_rep=False,
             auto=frozenset(mesh.axis_names) - {axis_name},
         )
-        return fn(params, opt_state, ex_state, batch, key, axis_ix)
+        return fn(*args)
 
     return sharded_step
 

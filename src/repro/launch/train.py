@@ -46,6 +46,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.checkpoint import checkpointing  # noqa: E402
 from repro.configs.base import INPUT_SHAPES, ShapeConfig  # noqa: E402
 from repro.configs.registry import ARCHS, get_config  # noqa: E402
+from repro.core import faults  # noqa: E402
 from repro.core.exchange import (  # noqa: E402
     ExchangeConfig,
     make_exchange,
@@ -57,6 +58,7 @@ from repro.data.pipeline import add_modality_stubs, make_pipeline  # noqa: E402
 from repro.launch.steps import make_train_step  # noqa: E402
 from repro.models.model import build, param_pspecs  # noqa: E402
 from repro.optim import optimizers as opt  # noqa: E402
+from repro.optim import qgenx as qgenx_opt  # noqa: E402
 
 
 def build_exchange_config(args, n_dev: int):
@@ -136,6 +138,24 @@ def main(argv=None):
                          "local updates (0 = never; R = every R-th step "
                          "the drifted iterates are exchanged through the "
                          "same compressor)")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the non-finite step guard: psum'd finiteness "
+                         "check over the candidate update, lax.cond-reject "
+                         "bad steps (state carries through unchanged), plus "
+                         "a host-side watchdog that rolls back to the last-"
+                         "known-good snapshot (DESIGN.md §8)")
+    ap.add_argument("--rollback-after", type=int, default=3,
+                    help="watchdog: roll back after this many CONSECUTIVE "
+                         "rejected steps (a >=50%% rejection rate over a "
+                         "4x window also triggers)")
+    ap.add_argument("--fault-spec", default="",
+                    help="deterministic fault schedule for tests/CI, e.g. "
+                         "'nan_grad@5:worker=2;drop@8-10:worker=3;"
+                         "ckpt_truncate@12' (core/faults.py grammar)")
+    ap.add_argument("--allow-ckpt-reset", action="store_true",
+                    help="on restore, reset INCOMPATIBLE auxiliary state "
+                         "(ex_state) to fresh init instead of exiting; "
+                         "params/opt_state mismatches always exit")
     ap.add_argument("--host-devices", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
@@ -174,7 +194,18 @@ def main(argv=None):
     if args.optimizer == "qgenx":
         print(f"[train] qgenx method={args.method}", flush=True)
 
-    step_fn = make_train_step(model, opt_cfg, exchange=ex, mesh=mesh)
+    fault_spec = faults.FaultSpec.parse(args.fault_spec)
+    if fault_spec.events:
+        print(f"[train] fault schedule: {args.fault_spec}", flush=True)
+        if fault_spec.has_device_events and not args.guard:
+            print("[train] WARNING: device faults scheduled without --guard "
+                  "— non-finite steps will NOT be rejected", flush=True)
+    step_fn = make_train_step(
+        model, opt_cfg, exchange=ex, mesh=mesh, guard=args.guard,
+        fault_spec=fault_spec if fault_spec.events else None,
+    )
+    needs_fault_step = fault_spec.has_device_events
+    watchdog = faults.Watchdog(args.rollback_after) if args.guard else None
     repl = NamedSharding(mesh, P())
     dp = NamedSharding(mesh, P("data"))
     batch_sharding = {"tokens": NamedSharding(mesh, P("data", None)),
@@ -190,25 +221,43 @@ def main(argv=None):
     pipe = make_pipeline(cfg, shape, seed=args.seed)
 
     start_step = 0
-    if args.checkpoint_dir and checkpointing.latest_step(args.checkpoint_dir):
-        # ExchangeState is training state (QAda levels/stats/counter) and
-        # rides in the checkpoint; checkpoints without it, or with a state
-        # saved under a different exchange config (shape mismatch), restore
-        # params/opt_state and keep the freshly-initialized exchange state
+    have_ckpts = args.checkpoint_dir and (
+        checkpointing.latest_step(args.checkpoint_dir) is not None
+        or checkpointing.available_steps(args.checkpoint_dir)
+    )
+    if have_ckpts:
+        # Explicit-detection restore (no broad except): structure
+        # mismatches are diagnosed per-tree from the checkpoint meta.
+        # ExchangeState is auxiliary training state (QAda levels/stats/
+        # counter) — a checkpoint saved under a different exchange config
+        # may only reset it under --allow-ckpt-reset; params/opt_state
+        # mismatches always exit (resetting those silently would discard
+        # the run).  Corrupt files walk back to the newest intact step.
+        allow = ("ex_state",) if args.allow_ckpt_reset else ()
         try:
-            start_step, trees = checkpointing.restore(
+            start_step, trees, reset = checkpointing.restore_with_fallback(
                 args.checkpoint_dir,
                 {"params": params, "opt_state": opt_state,
                  "ex_state": ex_state},
+                allow_reset=allow,
             )
-            ex_state = trees["ex_state"]
-        except (KeyError, AssertionError):
-            start_step, trees = checkpointing.restore(
-                args.checkpoint_dir, {"params": params, "opt_state": opt_state}
-            )
-            print("[train] checkpoint has no compatible ex_state; "
-                  "exchange state reset")
-        params, opt_state = trees["params"], trees["opt_state"]
+        except checkpointing.CheckpointStructureError as e:
+            print(f"[train] checkpoint tree {e.tree!r} does not match this "
+                  f"run's state: {e.detail}", file=sys.stderr)
+            print("[train] pass --allow-ckpt-reset to reset incompatible "
+                  "auxiliary state (ex_state), or fix the run config to "
+                  "match the checkpoint", file=sys.stderr)
+            raise SystemExit(2)
+        except checkpointing.CheckpointCorruptError as e:
+            print(f"[train] no intact checkpoint at "
+                  f"{args.checkpoint_dir}: {e}", file=sys.stderr)
+            raise SystemExit(2)
+        params = trees.get("params", params)
+        opt_state = trees.get("opt_state", opt_state)
+        ex_state = trees.get("ex_state", ex_state)
+        for name in reset:
+            print(f"[train] checkpoint {name} incompatible with this run's "
+                  f"config; reset to fresh init (--allow-ckpt-reset)")
         pipe.restore({"step": start_step, "seed": args.seed})
         print(f"[train] restored step {start_step}")
 
@@ -223,14 +272,42 @@ def main(argv=None):
         batch = fixed_batch if args.repeat_batch else add_modality_stubs(
             next(pipe), cfg, seed=args.seed)
         t0 = time.time()
-        params, opt_state, ex_state, metrics = jitted(
-            params, opt_state, ex_state, batch, jax.random.fold_in(key, step)
-        )
+        step_args = [params, opt_state, ex_state, batch,
+                     jax.random.fold_in(key, step)]
+        if needs_fault_step:
+            # the fault schedule is keyed on the TRAIN-LOOP step (not the
+            # optimizer count — a rejected step does not advance count and
+            # a count-keyed fault would re-fire forever)
+            step_args.append(step)
+        params, opt_state, ex_state, metrics = jitted(*step_args)
         # fence the async dispatch for honest step timing WITHOUT moving
         # the metrics: device->host transfers (the float() fetches) are
         # blocking round-trips and are only paid on log steps
         jax.block_until_ready(metrics["loss"])
         times.append(time.time() - t0)
+        rejected = False
+        if watchdog is not None:
+            # guard mode pays two scalar fetches per step; the snapshot is
+            # a host copy, taken BEFORE the next jitted call invalidates
+            # the donated output buffers
+            rejected = bool(float(metrics["rejected"]))
+            nonfin = bool(float(metrics["nonfinite"]))
+            if watchdog.observe(step, rejected, nonfin):
+                if isinstance(opt_state, qgenx_opt.QGenXOptState):
+                    print(f"[train] watchdog: optimizer stats at rollback "
+                          f"{qgenx_opt.state_norms(opt_state)}", flush=True)
+                snap_step, trees = watchdog.rollback()
+                params = trees["params"]
+                opt_state = trees["opt_state"]
+                ex_state = trees["ex_state"]
+                print(f"[train] watchdog: rolled back to the step-"
+                      f"{snap_step} snapshot ({watchdog.summary()})",
+                      flush=True)
+            elif not rejected:
+                watchdog.record_good(step + 1, {
+                    "params": params, "opt_state": opt_state,
+                    "ex_state": ex_state,
+                })
         is_last = step == args.steps - 1
         if step % args.log_every == 0 or is_last:
             loss = float(metrics["loss"])
@@ -241,6 +318,12 @@ def main(argv=None):
             tail = f" drift={drift:.3e}" if args.sync_every > 1 else ""
             if coded:
                 tail += f" coded_bits={coded:.3e}"
+            if rejected:
+                tail += " REJECTED"
+            if needs_fault_step and ex is not None:
+                alive = float(metrics["alive"])
+                if alive != n_dev:
+                    tail += f" alive={alive:.0f}/{n_dev}"
             print(f"[train] step={step} loss={loss:.4f} "
                   f"dt={times[-1]*1e3:.0f}ms wire={wire:.3e}B{tail}", flush=True)
         if args.checkpoint_dir and args.checkpoint_every and (
@@ -251,6 +334,10 @@ def main(argv=None):
                 {"params": params, "opt_state": opt_state,
                  "ex_state": ex_state},
             )
+            for kind in fault_spec.ckpt_faults_at(step + 1):
+                faults.inject_ckpt_fault(args.checkpoint_dir, step + 1, kind)
+                print(f"[train] fault: injected {kind} into checkpoint "
+                      f"{step + 1}", flush=True)
     if not times:  # restored checkpoint already at/past --steps: nothing
         # ran, so save NOTHING — a save here would rewind the checkpoint
         # 'latest' pointer below the restored step
@@ -262,6 +349,12 @@ def main(argv=None):
             args.checkpoint_dir, args.steps,
             {"params": params, "opt_state": opt_state, "ex_state": ex_state},
         )
+        for kind in fault_spec.ckpt_faults_at(args.steps):
+            faults.inject_ckpt_fault(args.checkpoint_dir, args.steps, kind)
+            print(f"[train] fault: injected {kind} into checkpoint "
+                  f"{args.steps}", flush=True)
+    if watchdog is not None:
+        print(f"[train] guard: {watchdog.summary()}", flush=True)
     if (ex is not None and ex_cfg.level_schedule == "qada"
             and ex.compressor.has_levels):
         print(f"[train] qada levels={np.round(np.asarray(ex_state.levels), 4)}",

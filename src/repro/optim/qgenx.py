@@ -117,6 +117,29 @@ def init_qgenx_state(cfg: OptimizerConfig, params) -> QGenXOptState:
     )
 
 
+def state_norms(state: QGenXOptState) -> dict:
+    """Host-side diagnostic of the recursion's sufficient statistics:
+    ``{"y_l2", "sum_sq", "count", "prev_half_l2"}`` (floats/ints).
+
+    The train loop's watchdog prints this when a rollback fires, to name
+    WHAT diverged.  ``sum_sq`` matters most: it is a MONOTONE accumulator
+    — one non-finite (or merely enormous) increment permanently destroys
+    every future adaptive gamma, which is exactly why the step guard must
+    reject the whole state update, never just the params
+    (DESIGN.md §8).
+    """
+    def l2(tree):
+        if tree is None:
+            return 0.0
+        return float(jnp.sqrt(sum(
+            jnp.sum(jnp.square(l.astype(jnp.float32)))
+            for l in jax.tree_util.tree_leaves(tree)
+        )))
+
+    return {"y_l2": l2(state.y), "sum_sq": float(state.sum_sq),
+            "count": int(state.count), "prev_half_l2": l2(state.prev_half)}
+
+
 def local_sq_diff(g1, g2) -> Array:
     """This worker's ``||g_t - g_{t+1/2}||^2`` (summed over all leaves).
 

@@ -53,6 +53,16 @@ def test_recenter_wire_accounting_8dev():
     assert "ALL OK" in r.stdout
 
 
+def test_fault_tolerance_8dev():
+    """Acceptance: guard + fault schedule (NaN@5/worker2, drop@8-10/
+    worker3) completes all steps with exactly one rejection, byte-exact
+    alive-set wire accounting, bitwise pre-fault parity with a clean run,
+    and the all-ones-mask bits{4,8} x mode{gather,two_phase} parity grid."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_faults.py")])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
 def test_train_qgenx_optimizer_8dev():
     """Acceptance: --optimizer qgenx trains via the CLI on 8 devices with
     a compressed exchange and the local-update regime."""
