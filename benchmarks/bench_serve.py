@@ -1,0 +1,231 @@
+"""Serving wall-clock benchmark: tokens/s + cache bytes per KV policy.
+
+Times REAL continuous-batching serves through
+:class:`repro.serve.engine.ServeEngine` — staggered requests admitted
+mid-decode into freed slots, one jitted decode step over the packed
+batch — for each KV-cache storage policy (fp32 / int8 / int4), and
+commits the rows to ``BENCH_serve.json`` at the repo root.  The check
+the perf-smoke CI job holds every PR to:
+
+* measured ``tok_s`` rows exist for every policy (throughput is real,
+  not derived);
+* the quantized arenas deliver the acceptance compression —
+  fp32/int8 cache bytes >= 2x, fp32/int4 >= 4x.
+
+Timing protocol: the first serve of each engine compiles (prefill per
+prompt shape + the packed decode step) and is discarded as warm-up;
+timed runs reuse the compiled entry points via ``engine.reset()`` and
+are fenced — the engine host-syncs every decode step (``np.asarray`` on
+the packed argmax) and the harness ``block_until_ready``s the final
+cache.  Numbers are CPU-container wall-clock: they bound dispatch+
+compute on one host device, not TPU throughput — but policy-vs-policy
+on identical workloads is apples-to-apples either way (the arena bytes
+are exact on any backend).
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.bench_serve            # measure + write BENCH_serve.json
+  PYTHONPATH=src:. python -m benchmarks.bench_serve --out X.json --iters 3
+  PYTHONPATH=src:. python -m benchmarks.bench_serve --check BENCH_serve.json
+                                                               # schema + ratio gates, no jax needed
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+POLICIES = ("fp32", "int8", "int4")
+DEFAULT_ARCH = "gemma-2b"
+DEFAULT_WARMUP = 1
+DEFAULT_ITERS = 3
+# acceptance: quantized cache-byte reduction vs the fp32 arena
+MIN_RATIO = {"int8": 2.0, "int4": 4.0}
+
+
+def _workload(cfg, n_slots, prompt_len, gen, n_requests, seed=0):
+    """Same staggered mix the serve CLI uses: budgets differ so slots
+    free mid-decode and later requests admit into them."""
+    import numpy as np
+
+    from repro.serve.scheduler import Request
+
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for r in range(n_requests):
+        plen = max(1, prompt_len - (r % 3))
+        reqs.append(Request(
+            rid=r,
+            prompt=rng.randint(0, cfg.vocab_size, size=plen).tolist(),
+            max_new=max(1, gen - 2 * (r % 3)),
+        ))
+    return reqs
+
+
+def measure(args) -> dict:
+    import dataclasses
+
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeEngine
+
+    cfg = dataclasses.replace(
+        get_config(args.arch).reduced(), dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _workload(cfg, args.slots, args.prompt_len, args.gen,
+                     args.requests)
+    n_tok = sum(r.max_new for r in reqs)
+
+    rows = []
+    fp32_bytes = None
+    for policy in POLICIES:
+        eng = ServeEngine(
+            cfg, params, policy=policy, page_size=args.page_size,
+            n_slots=args.slots, max_len=args.prompt_len + args.gen, seed=0,
+        )
+        for _ in range(args.warmup):
+            eng.run(list(reqs))
+            eng.reset()
+        times = []
+        for _ in range(args.iters):
+            t0 = time.perf_counter()
+            eng.run(list(reqs))
+            jax.block_until_ready(eng.cache)
+            times.append(time.perf_counter() - t0)
+            eng.reset()
+        times.sort()
+        med = times[len(times) // 2]
+        tok_s = n_tok / med
+        if policy == "fp32":
+            fp32_bytes = eng.cache_bytes
+        row = {
+            "name": f"serve_{args.arch}_{policy}",
+            "tok_s": round(tok_s, 1),
+            "ms_median": round(med * 1e3, 1),
+            "cache_bytes": eng.cache_bytes,
+        }
+        rows.append(row)
+        print(f"# {policy}: {tok_s:.1f} tok/s, cache {eng.cache_bytes} B",
+              file=sys.stderr, flush=True)
+        if policy in MIN_RATIO:
+            rows.append({
+                "name": f"cache_ratio_{policy}",
+                "fp32_over_policy": round(fp32_bytes / eng.cache_bytes, 2),
+            })
+
+    return {
+        "section": "serve",
+        "meta": {
+            "arch": f"{args.arch} (reduced, float32)",
+            "slots": args.slots, "requests": len(reqs),
+            "prompt_len": args.prompt_len, "gen": args.gen,
+            "page_size": args.page_size,
+            "warmup": args.warmup, "iters": args.iters,
+            "tokens_per_run": n_tok,
+            "note": ("CPU container wall-clock through ServeEngine "
+                     "(continuous batching, per-step host sync); warm-up "
+                     "run excluded, engine.reset() between timed runs. "
+                     "cache_bytes are exact arena bytes on any backend."),
+        },
+        "rows": rows,
+    }
+
+
+def check_doc(doc: dict, arch: str = DEFAULT_ARCH) -> list:
+    """Validate a BENCH_serve document; returns a list of problems."""
+    problems = []
+    if doc.get("section") != "serve":
+        problems.append("section != 'serve'")
+    names = {r.get("name"): r for r in doc.get("rows", [])}
+    for policy in POLICIES:
+        row = names.get(f"serve_{arch}_{policy}")
+        if row is None or "tok_s" not in row or "cache_bytes" not in row:
+            problems.append(f"missing measured row serve_{arch}_{policy}")
+        elif row["tok_s"] <= 0:
+            problems.append(f"non-positive tok_s for {policy}")
+    for policy, floor in MIN_RATIO.items():
+        row = names.get(f"cache_ratio_{policy}")
+        if row is None or "fp32_over_policy" not in row:
+            problems.append(f"missing cache_ratio_{policy} row")
+        elif row["fp32_over_policy"] < floor:
+            problems.append(
+                f"cache reduction below acceptance for {policy}: "
+                f"{row['fp32_over_policy']}x < {floor}x")
+    return problems
+
+
+def _finish(doc, args, out_path) -> None:
+    from benchmarks.common import emit
+
+    for r in doc["rows"]:
+        if "tok_s" in r:
+            emit(r["name"], r["ms_median"] * 1e3,
+                 f"tok_s={r['tok_s']};cache_bytes={r['cache_bytes']}")
+        else:
+            emit(r["name"], 0.0,
+                 f"fp32_over_policy={r['fp32_over_policy']}")
+    problems = check_doc(doc, arch=args.arch)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out_path}", file=sys.stderr, flush=True)
+    if problems:
+        # plain Exception (not SystemExit) so benchmarks/run.py's
+        # per-section isolation catches it and later sections still run
+        raise RuntimeError(
+            "BENCH_serve check failed:\n  " + "\n  ".join(problems))
+
+
+def run(out: str | None = None) -> None:
+    """benchmarks.run entry point: measure with defaults, write the
+    committed baseline, emit CSV rows."""
+    args = _parse([])
+    doc = measure(args)
+    _finish(doc, args, out or os.path.join(REPO_ROOT, "BENCH_serve.json"))
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=DEFAULT_ARCH)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--warmup", type=int, default=DEFAULT_WARMUP)
+    ap.add_argument("--iters", type=int, default=DEFAULT_ITERS)
+    ap.add_argument("--out",
+                    default=os.path.join(REPO_ROOT, "BENCH_serve.json"))
+    ap.add_argument("--check", default="",
+                    help="validate an existing BENCH_serve.json (schema + "
+                         "cache-ratio gates) instead of measuring")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> None:
+    args = _parse(sys.argv[1:] if argv is None else argv)
+    if args.check:
+        with open(args.check) as f:
+            doc = json.load(f)
+        problems = check_doc(doc, arch=args.arch)
+        if problems:
+            raise SystemExit(
+                f"{args.check} failed:\n  " + "\n  ".join(problems))
+        ratios = {r["name"]: r["fp32_over_policy"]
+                  for r in doc["rows"] if "fp32_over_policy" in r}
+        print(f"{args.check}: OK "
+              f"({sum(1 for r in doc['rows'] if 'tok_s' in r)} measured "
+              f"rows; {ratios})")
+        return
+    doc = measure(args)
+    _finish(doc, args, args.out)
+
+
+if __name__ == "__main__":
+    main()

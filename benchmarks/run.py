@@ -9,6 +9,7 @@ Sections:
   fig1_*      — WGAN-GP FP32/UQ8/UQ4 protocol (bench_gan)
   fig4_*      — Q-GenX vs QSGDA (bench_convergence)
   quantize_*  — kernel micro-benchmarks (bench_kernels)
+  serve_*     — serving tokens/s + cache bytes per KV policy (bench_serve)
   roofline_*  — dry-run derived roofline terms (roofline; requires
                 experiments/dryrun artifacts)
 """
@@ -41,6 +42,7 @@ def main() -> None:
         bench_convergence,
         bench_gan,
         bench_kernels,
+        bench_serve,
         bench_step,
         bench_variance,
         common,
@@ -57,6 +59,10 @@ def main() -> None:
         # honoring --json-dir like the kernels snapshot
         "step": lambda: bench_step.run(
             out=os.path.join(args.json_dir, "BENCH_step.json")),
+        # serving throughput + cache-byte rows; writes BENCH_serve.json
+        # (measured wall-clock rows kept, like the step section)
+        "serve": lambda: bench_serve.run(
+            out=os.path.join(args.json_dir, "BENCH_serve.json")),
         "gan": lambda: bench_gan.run(steps=args.gan_steps),
         "roofline": roofline.run,
     }

@@ -1,31 +1,73 @@
-"""Batched serving driver: prefill a prompt batch, then greedy decode.
+"""Serving driver: paged quantized KV-cache + continuous batching.
 
-Example (CPU, reduced model):
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --batch 4 --prompt-len 16 --gen 16
+Attention decoders (gemma/llama/qwen families) run through the real
+inference path — :class:`repro.serve.engine.ServeEngine`: a paged arena
+storing K/V through the paper's unbiased quantizers (``--kv-bits
+8|4|mixed``), a continuous-batching scheduler (requests admitted into
+freed slots mid-decode, retired when their budget is spent), one jitted
+decode step over the packed batch, and one jitted full-sequence prefill
+per prompt shape.  SSM / MLA / enc-dec caches are not token-feature
+pages; those archs keep the dense ``decode_step`` fallback (the original
+token-loop prefill, retained below).
+
+Examples (CPU, reduced model):
+  PYTHONPATH=src python -m repro.launch.serve --reduced --kv-bits 8
+  PYTHONPATH=src python -m repro.launch.serve --reduced --kv-bits 4 \
+      --batch 4 --requests 12 --prompt-len 16 --gen 16
+  # 8 forced host devices: per-device quantization noise, logits
+  # ensemble-averaged through the Exchange seam (wire accounting on)
+  PYTHONPATH=src python -m repro.launch.serve --reduced --host-devices 8 \
+      --logit-exchange int8
+  # serve a trained checkpoint
+  PYTHONPATH=src python -m repro.launch.serve --reduced \
+      --restore /tmp/ckpt
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.registry import ARCHS, get_config
-from repro.launch.steps import make_serve_step
-from repro.models.model import build
+def _early_flags():
+    # must run before jax import
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--host-devices", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}"
+        )
+
+
+_early_flags()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import checkpointing  # noqa: E402
+from repro.configs.registry import ARCHS, get_config  # noqa: E402
+from repro.core.exchange import ExchangeConfig  # noqa: E402
+from repro.core.quantization import QuantConfig  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.launch.steps import make_serve_step  # noqa: E402
+from repro.models import transformer  # noqa: E402
+from repro.models.model import build  # noqa: E402
+from repro.serve.engine import ServeEngine  # noqa: E402
+from repro.serve.scheduler import Request  # noqa: E402
 
 
 def prefill_into_cache(model, params, tokens, cache):
     """Populate the cache by teacher-forcing the prompt token-by-token.
 
-    (A production prefill runs the full-sequence kernel and writes the cache
-    in one shot; the loop keeps this driver architecture-agnostic — SSM and
-    MLA caches fill through the same decode_step contract.)
+    Fallback for archs without a paged cache (SSM / MLA / enc-dec fill
+    their state through the same ``decode_step`` contract); attention
+    archs take the single jitted full-sequence prefill in
+    :mod:`repro.serve.engine` instead.
     """
     step = jax.jit(model.decode_step)
     B, S = tokens.shape
@@ -35,24 +77,108 @@ def prefill_into_cache(model, params, tokens, cache):
     return logits, cache
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="gemma-2b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    model = build(cfg)
-    key = jax.random.PRNGKey(args.seed)
+def _restore_params(model, cfg, args, key):
     params = model.init(key)
+    if not args.restore:
+        return params
+    try:
+        step, trees, _ = checkpointing.restore_with_fallback(
+            args.restore, {"params": params}
+        )
+    except checkpointing.CheckpointStructureError as e:
+        print(f"[serve] checkpoint params do not match arch "
+              f"{cfg.name!r}: {e.detail}", file=sys.stderr)
+        raise SystemExit(2)
+    except checkpointing.CheckpointCorruptError as e:
+        print(f"[serve] no intact checkpoint at {args.restore}: {e}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    print(f"[serve] restored params from {args.restore} @ step {step}")
+    return trees["params"]
 
+
+def _workload(args, cfg, key):
+    """Staggered request mix: generation budgets differ so sequences
+    retire at different steps, opening slots for mid-decode admission."""
+    n = args.requests or 2 * args.batch
+    reqs = []
+    for r in range(n):
+        k = jax.random.fold_in(key, r)
+        plen = max(1, args.prompt_len - (r % 3))
+        prompt = np.asarray(
+            jax.random.randint(k, (plen,), 0, cfg.vocab_size)
+        ).tolist()
+        max_new = max(1, args.gen - 2 * (r % 3))
+        reqs.append(Request(rid=r, prompt=prompt, max_new=max_new))
+    return reqs
+
+
+def _serve_paged(args, cfg, model, params, key):
+    max_len = args.prompt_len + args.gen
+    policy = {"32": "fp32", "8": "int8", "4": "int4"}.get(
+        args.kv_bits, args.kv_bits
+    )
+    mesh = exchange = None
+    n_dev = len(jax.devices())
+    if args.logit_exchange != "off" and n_dev > 1:
+        mesh = make_host_mesh(n_dev)
+        if args.logit_exchange == "fp32":
+            exchange = ExchangeConfig(compressor="none", axis_name="data")
+        else:
+            bits = int(args.logit_exchange.replace("int", ""))
+            exchange = ExchangeConfig(
+                compressor="qgenx",
+                quant=QuantConfig(
+                    num_levels=15 if bits == 8 else 5, bits=bits,
+                    bucket_size=512,
+                ),
+                mode="two_phase",
+                axis_name="data",
+            )
+    eng = ServeEngine(
+        cfg, params, policy=policy, page_size=args.page_size,
+        n_slots=args.batch, max_len=max_len, num_pages=args.num_pages,
+        seed=args.seed, exchange=exchange, mesh=mesh,
+    )
+    reqs = _workload(args, cfg, key)
+    print(f"[serve] arch={cfg.name} slots={args.batch} requests={len(reqs)} "
+          f"kv={policy} {eng.pc.describe()}")
+
+    events: list = []
+    t0 = time.time()
+    out = eng.run(reqs, events=events)
+    wall = time.time() - t0
+
+    for kind, rid, slot, step in events:
+        where = f"slot {slot}" if kind == "admit" else "freed pages"
+        print(f"[serve]   step {step:3d} {kind:6s} request {rid} ({where})")
+    st = eng.sched.stats
+    n_tok = sum(len(v) for v in out.values())
+    print(f"[serve] admitted={st['admitted']} retired={st['retired']} "
+          f"mid_decode_admits={st['mid_decode_admits']} "
+          f"max_concurrent={st['max_concurrent']}")
+    print(f"[serve] {n_tok} tokens in {wall*1e3:.0f}ms "
+          f"({n_tok/max(wall,1e-9):.1f} tok/s, "
+          f"{eng.sched.decode_steps} packed decode steps)")
+    ratio = eng.fp32_cache_bytes / eng.cache_bytes
+    print(f"[serve] cache {eng.cache_bytes} B vs fp32 {eng.fp32_cache_bytes} B "
+          f"({ratio:.2f}x smaller)")
+    if exchange is not None:
+        print(f"[serve] logit exchange over {eng.K} devices: "
+              f"wire={eng.wire_bytes:.0f} B "
+              f"({eng.wire_per_step:.0f} B/step), "
+              f"coded_bits_est={eng.coded_bits:.0f}")
+    sample = out[reqs[0].rid]
+    print(f"[serve] sample tokens: {sample[:12]}")
+    return out
+
+
+def _serve_dense(args, cfg, model, params, key):
+    """Original batch-synchronous greedy loop (SSM / MLA / enc-dec)."""
+    if args.kv_bits != "32":
+        print(f"[serve] note: arch {cfg.name!r} ({cfg.arch_type}) has no "
+              f"paged token cache; --kv-bits {args.kv_bits} ignored "
+              f"(dense decode fallback)")
     B = args.batch
     prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
     batch = {"tokens": prompts}
@@ -80,6 +206,50 @@ def main(argv=None):
           f"({t_decode/max(args.gen-1,1)*1e3:.1f}ms/tok)")
     print(f"[serve] sample tokens: {gen[0][:12].tolist()}")
     return gen
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host devices (handled before jax import)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="packed decode slots (dense fallback: batch size)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests to serve (default 2x --batch)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kv-bits", choices=("32", "8", "4", "mixed"),
+                    default="8",
+                    help="KV-cache storage policy (mixed: int8 global "
+                         "layers, int4 local-window layers)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per cache page")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="arena pages (0 = provision every slot fully; "
+                         "smaller forces admission waits)")
+    ap.add_argument("--logit-exchange",
+                    choices=("off", "fp32", "int8", "int4"), default="int8",
+                    help="cross-device logit aggregation policy (active "
+                         "when >1 device is visible)")
+    ap.add_argument("--restore", default="",
+                    help="checkpoint dir: serve trained params "
+                         "(restore_with_fallback)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = _restore_params(model, cfg, args, key)
+
+    if transformer.paged_eligible(cfg):
+        return _serve_paged(args, cfg, model, params, key)
+    return _serve_dense(args, cfg, model, params, key)
 
 
 if __name__ == "__main__":

@@ -436,6 +436,84 @@ def attention_decode(
     return out, k_cache, v_cache
 
 
+def attention_decode_paged(
+    p,
+    cfg: ModelConfig,
+    pc,  # repro.serve.kv_cache.PagedCacheConfig (static)
+    cache: dict,  # paged arena (all layers)
+    l: int,  # static layer index
+    x: Array,  # [B, 1, D]
+    pos: Array,  # [B] int32 per-slot positions
+    page_table: Array,  # [B, blocks_per_seq] int32, -1 = unmapped
+    keys: Array,  # [B] PRNG keys for cache-write quantization noise
+    mode: AttnMode,
+) -> tuple[Array, dict]:
+    """One-token decode against the paged quantized cache.
+
+    Differences from :func:`attention_decode`: positions are PER-SLOT
+    (continuous batching packs requests at different depths), history
+    comes back dequantized from the arena via the page table, and the
+    current token rides as an explicit always-valid extra key slot
+    instead of read-after-write through the cache — so the attention
+    math never sees its own quantization noise for the newest token.
+    Window/chunk layers mask ``key_pos > pos - W`` rather than slicing
+    (dense decode's chunk≈window approximation, kept identical here so
+    fp32-paged matches dense decode to float tolerance).
+
+    Returns (out [B, 1, D], cache with this token written).  Slots whose
+    page-table row is all -1 are inert: their writes drop and the
+    current-token slot keeps the softmax finite.
+    """
+    from repro.serve import kv_cache as KVC  # lazy: serve imports configs only
+
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm and "q_norm" in p:
+        q = head_rms_norm(p["q_norm"], q)
+        k_new = head_rms_norm(p["k_norm"], k_new)
+    cos, sin = rope_cos_sin(pos[:, None], hd, cfg.rope_theta)  # [B,1,hd/2]
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+
+    k_hist, v_hist = KVC.read_kv(cache, pc, l, page_table)  # [B,T,KV,hd] f32
+    T = k_hist.shape[1]
+    key_pos = jnp.arange(T)[None, :]
+    mapped = jnp.repeat(page_table >= 0, pc.page_size, axis=1)
+    valid = (key_pos < pos[:, None]) & mapped
+    if mode.window or mode.chunk:
+        W = mode.window or mode.chunk
+        valid = valid & (key_pos > pos[:, None] - W)
+    k_all = jnp.concatenate([k_hist, k_new.astype(jnp.float32)], axis=1)
+    v_all = jnp.concatenate([v_hist, v_new.astype(jnp.float32)], axis=1)
+    valid = jnp.concatenate([valid, jnp.ones((B, 1), bool)], axis=1)
+
+    KV = k_all.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k_all,
+        preferred_element_type=jnp.float32,
+    ) * (hd**-0.5)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", w, v_all, preferred_element_type=jnp.float32
+    )
+    out = out.reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+
+    page_w = jnp.take_along_axis(
+        page_table, (pos // pc.page_size)[:, None], axis=1
+    )[:, 0]
+    cache = KVC.write_token(
+        cache, pc, l, k_new[:, 0], v_new[:, 0], page_w, pos % pc.page_size, keys
+    )
+    return out, cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------

@@ -299,6 +299,117 @@ def decode_block(p, cfg: ModelConfig, x, pos, layer_cache, is_moe: bool, is_glob
     return x, new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged decode / jitted prefill (serving path — repro.serve)
+# ---------------------------------------------------------------------------
+
+
+def paged_eligible(cfg: ModelConfig) -> bool:
+    """Archs the paged quantized cache serves: pure-attention decoders
+    with per-head K/V (SSM/hybrid state and MLA's latent cache are not
+    token×feature pages; they keep the dense ``decode_step`` contract)."""
+    return (
+        _has_attention(cfg)
+        and not _has_ssm(cfg)
+        and not cfg.kv_lora_rank
+        and cfg.arch_type not in ("encdec", "audio")
+    )
+
+
+def _layer_params_at(params, cfg: ModelConfig, l: int):
+    """Per-layer param tree by absolute layer index (static ``l``)."""
+    period, _, n_periods, _ = layer_pattern(cfg)
+    if l < n_periods * period:
+        i, j = divmod(l, period)
+        return _layer_at(params["layers"][j], i)
+    return params["layers_tail"][l - n_periods * period]
+
+
+def forward_with_kv(params, cfg: ModelConfig, tokens: Array, extra_embeds=None):
+    """Full-sequence prefill that also returns every layer's roped K/V.
+
+    tokens [B, S] -> (logits [B, S, V], ((k, v) [B, S, KV, hd] per layer)).
+    Same math as :func:`forward` (layer loop unrolled in Python so each
+    layer's K/V can be captured); the returned K/V are exactly what
+    :func:`repro.models.layers.attention_decode` would have written into
+    a dense cache token-by-token — tested against that loop.
+    """
+    B, S = tokens.shape
+    x = embed_tokens(params, cfg, tokens, extra_embeds)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    period, flags, _, _ = layer_pattern(cfg)
+    kvs = []
+    for l in range(cfg.num_layers):
+        p = _layer_params_at(params, cfg, l)
+        h = L.norm_apply(p["ln_attn"], x, cfg.norm_type)
+        kvs.append(L.attention_prefill_kv(p["attn"], cfg, h, positions))
+        x, _ = block_apply(p, cfg, x, positions, *flags[l % period])
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), params["embed"])
+    else:
+        logits = x.astype(jnp.float32) @ params["unembed"]
+    return logits, tuple(kvs)
+
+
+def prefill_paged(params, cfg: ModelConfig, pc, cache, tokens: Array,
+                  pages: Array, keys: Array):
+    """One jitted pass: forward the whole prompt and write every layer's
+    K/V into the paged arena.
+
+    tokens [B, S] with S == pages.shape[1] * page_size (pad the prompt;
+    padded positions are overwritten by decode at its own position before
+    the ``key_pos < pos`` mask can expose them); pages [B, nblk]; keys
+    [B] per-request PRNG keys.  Returns (logits [B, S, V], cache).
+    """
+    from repro.serve import kv_cache as KVC
+
+    logits, kvs = forward_with_kv(params, cfg, tokens)
+    for l, (k, v) in enumerate(kvs):
+        lkeys = jax.vmap(jax.random.fold_in, (0, None))(keys, l)
+        cache = KVC.write_prompt(cache, pc, l, k, v, pages, lkeys)
+    return logits, cache
+
+
+def decode_step_paged(params, cfg: ModelConfig, pc, cache, token: Array,
+                      pos: Array, page_table: Array, write_keys: Array):
+    """Packed-batch paged decode: token/pos [B] (per-slot positions),
+    page_table [B, blocks_per_seq], write_keys [B] (already folded with
+    the per-slot position) -> (logits [B, V], cache).
+
+    Layers unroll in Python: segments carry heterogeneous payload widths
+    (int4 vs int8 vs fp32 arrays), so a single lax.scan over layers
+    cannot carry the cache — same trade ``unroll_scan`` makes for the
+    multi-pod train path.
+    """
+    x = params["embed"][token][:, None, :].astype(jnp.dtype(cfg.dtype))
+    x = x * (cfg.d_model**0.5)
+    period, flags, _, _ = layer_pattern(cfg)
+    for l in range(cfg.num_layers):
+        p = _layer_params_at(params, cfg, l)
+        is_moe, is_global = flags[l % period]
+        lkeys = jax.vmap(jax.random.fold_in, (0, None))(write_keys, l)
+        h = L.norm_apply(p["ln_attn"], x, cfg.norm_type)
+        a, cache = L.attention_decode_paged(
+            p["attn"], cfg, pc, cache, l, h, pos, page_table, lkeys,
+            _attn_mode(cfg, is_global),
+        )
+        x = x + a
+        if is_moe:
+            h = L.norm_apply(p["ln_mlp"], x, cfg.norm_type)
+            m, _ = MOE.moe_apply(p["moe"], cfg, h)
+            x = x + m
+        elif cfg.d_ff > 0:
+            h = L.norm_apply(p["ln_mlp"], x, cfg.norm_type)
+            x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_type)
+    x = L.norm_apply(params["ln_f"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), params["embed"])
+    else:
+        logits = x.astype(jnp.float32) @ params["unembed"]
+    return logits[:, 0], cache
+
+
 def decode_step(params, cfg: ModelConfig, cache, token: Array, pos: Array):
     """token [B] int32, pos [] int32 -> (logits [B, V], new cache)."""
     x = params["embed"][token][:, None, :].astype(jnp.dtype(cfg.dtype))

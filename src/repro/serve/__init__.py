@@ -1,0 +1,15 @@
+"""Serving subsystem: paged quantized KV-cache, continuous batching, engine.
+
+Modules (import them directly — this package intentionally re-exports
+nothing, because :mod:`repro.models.transformer` imports
+:mod:`repro.serve.kv_cache` for its paged decode path and an eager
+re-export of :mod:`repro.serve.engine` here would close an import cycle
+through :mod:`repro.models.model`):
+
+* :mod:`repro.serve.kv_cache` — the paged, quantized K/V arena (depends
+  only on ``repro.core`` + ``repro.configs``).
+* :mod:`repro.serve.scheduler` — host-side continuous-batching state
+  machine (pure Python, no jax).
+* :mod:`repro.serve.engine` — binds both to the jitted model entry
+  points and the Exchange seam.
+"""

@@ -1,0 +1,335 @@
+"""Serving engine: continuous batching over a paged quantized KV-cache.
+
+One :class:`ServeEngine` owns the arena, the scheduler, and the jitted
+model entry points:
+
+* **prefill** — per-request, one jitted full-sequence forward per padded
+  prompt length (:func:`repro.models.transformer.prefill_paged`): the
+  whole prompt's K/V lands in the arena in one pass, and the last
+  position's logits yield the first generated token.  Running prefill at
+  B=1 is also what makes a request's stochastic-rounding draws
+  independent of what else is packed alongside it.
+* **decode** — ONE jitted step over the packed slot batch
+  (:func:`repro.models.transformer.decode_step_paged`), per-slot
+  positions and page tables, greedy argmax.  Empty slots are inert:
+  page-table rows of -1 drop their cache writes and the current-token
+  key slot keeps their softmax finite; their outputs are ignored.
+
+Quantizer-noise keying: slot ``s`` decoding position ``p`` uses
+``fold_in(fold_in(PRNGKey(seed), rid), p)`` (then per-layer and k/v-tag
+folds inside the model) — a function of the REQUEST, never of the slot
+index or batch occupancy, so greedy tokens are bit-identical whether the
+request runs alone or packed (tested).
+
+Multi-device mode (``mesh=`` + ``exchange=``): the arena gains a leading
+device axis sharded over ``data``; each device folds its axis index into
+the write keys, so K devices hold K independently-quantized caches of
+the same sequences — an ensemble over quantization noise.  Each decode
+step aggregates per-device logits through the SAME Exchange seam
+training uses (``ex.pmean_tree``), which is what puts serving traffic
+under ``wire_bytes``/``coded_bits_est`` accounting: the engine's
+analytic per-step bytes are asserted equal to the trace-time recorder on
+8 forced host devices in CI.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.exchange import Exchange, ExchangeConfig, make_exchange
+from repro.models import transformer as T
+from repro.serve import kv_cache as KVC
+from repro.serve.scheduler import Scheduler
+
+Array = jax.Array
+
+
+def _tree_stack_lead(tree, k: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (k, *a.shape)), tree
+    )
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        policy: str = "int8",
+        page_size: int = 8,
+        n_slots: int = 4,
+        max_len: int = 64,
+        num_pages: int = 0,  # 0 = fully provision every slot
+        seed: int = 0,
+        exchange=None,  # ExchangeConfig | Exchange | None
+        mesh=None,
+    ):
+        if not T.paged_eligible(cfg):
+            raise ValueError(
+                f"arch {cfg.name!r} ({cfg.arch_type}) has no paged cache; "
+                "use the dense decode_step fallback in launch/serve.py"
+            )
+        blocks_per_seq = -(-max_len // page_size)
+        if not num_pages:
+            num_pages = n_slots * blocks_per_seq
+        self.cfg = cfg
+        self.params = params
+        self.seed = seed
+        self.pc = KVC.make_paged_cache_config(
+            cfg, policy, page_size, num_pages, blocks_per_seq
+        )
+        self.allocator = KVC.PageAllocator(num_pages)
+        self.sched = Scheduler(n_slots, page_size, blocks_per_seq, self.allocator)
+        self.n_slots = n_slots
+        self.mesh = mesh
+        self.ex: Exchange | None = (
+            make_exchange(exchange) if isinstance(exchange, ExchangeConfig)
+            else exchange
+        )
+        if (self.ex is None) != (mesh is None):
+            raise ValueError("multi-device serving needs BOTH exchange and mesh")
+        self._root_key = jax.random.PRNGKey(seed)
+        self._zero_key = np.zeros_like(np.asarray(self._root_key))
+        self.wire_bytes = 0.0
+        self.coded_bits = 0.0
+        self._prefill_jits: dict = {}
+        if self.ex is None:
+            self.cache = KVC.init_paged_cache(self.pc)
+            self._decode = jax.jit(self._decode_local, donate_argnums=(0,))
+        else:
+            self.axis = self.ex.cfg.axis_name
+            self.K = mesh.shape[self.axis]
+            self.ex_state = self.ex.init_state()
+            self.cache = _tree_stack_lead(KVC.init_paged_cache(self.pc), self.K)
+            self._decode = jax.jit(self._make_dist_decode(), donate_argnums=(0,))
+            # analytic operand bytes of the per-step logit exchange — the
+            # serving counterpart of the train step's wire_bytes metric
+            logits_like = {
+                "logits": jnp.zeros((n_slots, cfg.vocab_size), jnp.float32)
+            }
+            self.wire_per_step = float(
+                self.ex.wire_bytes_tree(logits_like, self.K)
+            )
+
+    # -- jitted entry points -----------------------------------------------
+
+    def _decode_local(self, cache, params, token, pos, page_table, slot_keys):
+        wkeys = jax.vmap(jax.random.fold_in)(slot_keys, pos)
+        logits, cache = T.decode_step_paged(
+            params, self.cfg, self.pc, cache, token, pos, page_table, wkeys
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+
+    def _make_dist_decode(self):
+        ex, cfg, pc, axis = self.ex, self.cfg, self.pc, self.axis
+        mesh = self.mesh
+
+        def core(caches, params, token, pos, page_table, slot_keys,
+                 ex_state, key, axis_ix):
+            cache = jax.tree_util.tree_map(lambda a: a[0], caches)
+            ix = axis_ix[0]
+            wkeys = jax.vmap(jax.random.fold_in)(slot_keys, pos)
+            # per-device noise stream -> K independently-quantized caches
+            wkeys = jax.vmap(jax.random.fold_in, (0, None))(wkeys, ix)
+            logits, cache = T.decode_step_paged(
+                params, cfg, pc, cache, token, pos, page_table, wkeys
+            )
+            out, ex_state = ex.pmean_tree(
+                {"logits": logits}, ex_state, key, ix
+            )
+            coded = (
+                ex.coded_bits_tree({"logits": logits}, ex_state)
+                if ex.cfg.compressor == "qgenx" else jnp.float32(0.0)
+            )
+            nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
+            caches = jax.tree_util.tree_map(lambda a: a[None], cache)
+            return nxt, out["logits"], caches, ex_state, coded
+
+        def step(caches, params, token, pos, page_table, slot_keys,
+                 ex_state, key):
+            axis_ix = jnp.arange(mesh.shape[axis], dtype=jnp.int32)
+            fn = shard_map(
+                core,
+                mesh=mesh,
+                in_specs=(P(axis), P(), P(), P(), P(), P(), P(), P(), P(axis)),
+                out_specs=(P(), P(), P(axis), P(), P()),
+                check_rep=False,
+            )
+            return fn(caches, params, token, pos, page_table, slot_keys,
+                      ex_state, key, axis_ix)
+
+        return step
+
+    def _prefill_for(self, s_pad: int, nblk: int):
+        """Jitted prefill, cached per padded prompt length."""
+        if (s_pad, nblk) not in self._prefill_jits:
+            cfg, pc = self.cfg, self.pc
+            if self.ex is None:
+                def fn(cache, params, tokens, pages, keys):
+                    return T.prefill_paged(params, cfg, pc, cache, tokens,
+                                           pages, keys)
+                self._prefill_jits[(s_pad, nblk)] = jax.jit(
+                    fn, donate_argnums=(0,)
+                )
+            else:
+                mesh, axis = self.mesh, self.axis
+
+                def core(caches, params, tokens, pages, keys, axis_ix):
+                    cache = jax.tree_util.tree_map(lambda a: a[0], caches)
+                    dkeys = jax.vmap(jax.random.fold_in, (0, None))(
+                        keys, axis_ix[0]
+                    )
+                    # prefill logits never read the quantized cache, so
+                    # they are identical across devices — no collective
+                    logits, cache = T.prefill_paged(
+                        params, cfg, pc, cache, tokens, pages, dkeys
+                    )
+                    return logits, jax.tree_util.tree_map(
+                        lambda a: a[None], cache
+                    )
+
+                def fn(caches, params, tokens, pages, keys):
+                    axis_ix = jnp.arange(mesh.shape[axis], dtype=jnp.int32)
+                    sm = shard_map(
+                        core, mesh=mesh,
+                        in_specs=(P(axis), P(), P(), P(), P(), P(axis)),
+                        out_specs=(P(), P(axis)),
+                        check_rep=False,
+                    )
+                    return sm(caches, params, tokens, pages, keys, axis_ix)
+
+                self._prefill_jits[(s_pad, nblk)] = jax.jit(
+                    fn, donate_argnums=(0,)
+                )
+        return self._prefill_jits[(s_pad, nblk)]
+
+    # -- host-side orchestration -------------------------------------------
+
+    def _req_key(self, rid: int) -> np.ndarray:
+        return np.asarray(jax.random.fold_in(self._root_key, rid))
+
+    def _prefill_slot(self, slot) -> None:
+        plen = len(slot.req.prompt)
+        ps = self.pc.page_size
+        nblk = -(-plen // ps)
+        s_pad = nblk * ps
+        tokens = np.zeros((1, s_pad), np.int32)
+        tokens[0, :plen] = slot.req.prompt
+        pages = np.asarray(slot.pages[:nblk], np.int32)[None]
+        keys = self._req_key(slot.req.rid)[None]
+        fn = self._prefill_for(s_pad, nblk)
+        logits, self.cache = fn(
+            self.cache, self.params, jnp.asarray(tokens), jnp.asarray(pages),
+            jnp.asarray(keys),
+        )
+        first = int(np.argmax(np.asarray(logits[0, plen - 1])))
+        slot.pos = plen
+        slot.last_token = first
+        slot.out.append(first)
+
+    def _admit_and_prefill(self, events=None) -> None:
+        # retire/admit until fixed point: a prefilled request whose budget
+        # is a single token retires immediately, freeing pages mid-wave
+        while True:
+            for i, slot in self.sched.admit():
+                self._prefill_slot(slot)
+                if events is not None:
+                    events.append(("admit", slot.req.rid, i,
+                                   self.sched.decode_steps))
+            done = self.sched.retire_finished()
+            if events is not None:
+                for slot in done:
+                    events.append(("retire", slot.req.rid, -1,
+                                   self.sched.decode_steps))
+            if not done:
+                return
+
+    def _pack(self, active):
+        B = self.n_slots
+        token = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        pt = np.full((B, self.pc.blocks_per_seq), -1, np.int32)
+        keys = np.broadcast_to(self._zero_key, (B, *self._zero_key.shape)).copy()
+        for i, slot in active:
+            token[i] = slot.last_token
+            pos[i] = slot.pos
+            pt[i, : len(slot.pages)] = slot.pages
+            keys[i] = self._req_key(slot.req.rid)
+        return (jnp.asarray(token), jnp.asarray(pos), jnp.asarray(pt),
+                jnp.asarray(keys))
+
+    def run(self, requests, events=None) -> dict:
+        """Drive every request to completion; returns {rid: out tokens}.
+
+        ``events`` (optional list) collects ("admit"|"retire", rid,
+        slot, decode_step) tuples — the mid-decode admission evidence the
+        tests and the serve CLI print.
+        """
+        for r in requests:
+            self.sched.submit(r)
+        self._admit_and_prefill(events)
+        while self.sched.has_work():
+            active = self.sched.active()
+            if not active:
+                raise RuntimeError(
+                    "scheduler stalled: waiting requests but nothing active"
+                )
+            token, pos, pt, keys = self._pack(active)
+            if self.ex is None:
+                nxt, _, self.cache = self._decode(
+                    self.cache, self.params, token, pos, pt, keys
+                )
+            else:
+                step_key = jax.random.fold_in(
+                    self._root_key, 0x5e4e + self.sched.decode_steps
+                )
+                nxt, _, self.cache, self.ex_state, coded = self._decode(
+                    self.cache, self.params, token, pos, pt, keys,
+                    self.ex_state, step_key,
+                )
+                self.wire_bytes += self.wire_per_step
+                self.coded_bits += float(coded)
+            self.sched.decode_steps += 1
+            nxt_host = np.asarray(nxt)
+            for i, slot in active:
+                t = int(nxt_host[i])
+                slot.out.append(t)
+                slot.last_token = t
+                slot.pos += 1
+            self._admit_and_prefill(events)
+        return {s.req.rid: list(s.out) for s in self.sched.finished}
+
+    def reset(self) -> None:
+        """Empty the engine (fresh scheduler + arena bookkeeping) while
+        keeping the compiled decode/prefill entry points.
+
+        The cache arrays themselves are NOT cleared: stale pages are dead
+        by construction — a slot only reads positions below its own
+        ``pos`` through its own page table, and prefill overwrites every
+        page it is granted.  This is what lets the serve benchmark time
+        warm steady-state runs with compilation excluded.
+        """
+        self.allocator = KVC.PageAllocator(self.pc.num_pages)
+        self.sched = Scheduler(
+            self.n_slots, self.pc.page_size, self.pc.blocks_per_seq,
+            self.allocator,
+        )
+        self.wire_bytes = 0.0
+        self.coded_bits = 0.0
+        if self.ex is not None:
+            self.ex_state = self.ex.init_state()
+
+    @property
+    def cache_bytes(self) -> int:
+        """Arena bytes per device (the quantization win the bench reports)."""
+        return KVC.cache_bytes(self.pc)
+
+    @property
+    def fp32_cache_bytes(self) -> int:
+        return KVC.fp32_cache_bytes(self.pc)

@@ -1,0 +1,421 @@
+"""Paged, quantized KV-cache: one shared arena, per-layer bit policies.
+
+Sequences of different lengths share one pool of fixed-size pages
+(``page_size`` tokens each); a per-request *page table* maps sequence
+blocks to arena pages, so admission/retirement is a host-side free-list
+operation and the device arrays never reshape.  K/V tokens are stored
+through the SAME unbiased quantizer the gradient exchange uses
+(:mod:`repro.core.quantization`, paper Definition 1): one norm bucket per
+token (bucket = the padded ``kv_heads * head_dim`` feature vector), int8
+or int4 fixed-width payloads, stochastic rounding keyed per
+(request, position, layer) — which is what makes a request's greedy
+decode bit-identical whether it runs alone or packed with others.
+
+Per-layer bit policies reuse the ExchangePlan segment-table mechanism
+(:class:`repro.core.exchange_plan.PlanSegment`): contiguous layer ranges
+under one :class:`~repro.core.quantization.QuantConfig` (``quant=None``
+= fp32 storage).  The ``mixed`` policy maps the layer pattern's global-
+attention layers to int8 and the local (sliding/chunked window) layers
+to int4 — the "Layer-wise Quantization" observation (Nguyen et al.,
+PAPERS.md) applied to inference state: short-range layers tolerate more
+cache noise.
+
+Storage layout per segment ``j`` (heterogeneous widths are why segments
+are separate arrays, not one stacked ``[L, ...]`` tensor — int4 pages
+really are half the bytes of int8 pages, see :func:`cache_bytes`):
+
+  fp32:   seg{j}_k        [Lj, num_pages, page_size, KV, hd] f32 (+ v)
+  int8/4: seg{j}_k_payload [Lj, num_pages, page_size, W] int8 (+ v)
+          seg{j}_k_norms   [Lj, num_pages, page_size]     f32 (+ v)
+
+with ``W = feat_pad`` (int8) or ``feat_pad // 2`` (int4, two signed
+indices per byte — the same packing the wire format uses).
+
+This module depends only on ``repro.core`` and ``repro.configs`` so the
+model stack can import it without a cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.exchange_plan import PlanSegment
+from repro.core.quantization import (
+    QuantConfig,
+    _stochastic_round_indices,
+    bucket_norms,
+    uniform_levels,
+)
+
+Array = jax.Array
+
+POLICIES = ("fp32", "int8", "int4", "mixed")
+
+
+def quant_for_bits(bits: int, bucket: int) -> Optional[QuantConfig]:
+    """The cache quantizer for one bit-width (32 = fp32 storage, None)."""
+    if bits == 32:
+        return None
+    s = 15 if bits == 8 else 5  # max levels each payload width can hold
+    return QuantConfig(num_levels=s, q_norm=math.inf, bucket_size=bucket,
+                       bits=bits, stochastic=True)
+
+
+def layer_bit_policy(cfg: ModelConfig, policy: str) -> tuple:
+    """Per-layer payload bits (32 | 8 | 4) under a named policy.
+
+    ``mixed``: global-attention layers int8, local-window layers int4
+    (keyed on the same ``layer_pattern`` flags the forward pass uses).
+    An arch with no local layers degrades to all-int8.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown cache policy {policy!r} (want {POLICIES})")
+    if policy == "fp32":
+        return (32,) * cfg.num_layers
+    if policy in ("int8", "int4"):
+        return (8 if policy == "int8" else 4,) * cfg.num_layers
+    from repro.models.transformer import layer_pattern  # lazy: no cycle
+    period, flags, _, _ = layer_pattern(cfg)
+    return tuple(
+        8 if flags[l % period][1] else 4 for l in range(cfg.num_layers)
+    )
+
+
+def build_layer_segments(bits_per_layer, feat_pad: int) -> tuple:
+    """Group contiguous same-policy layer runs into PlanSegments.
+
+    ``start``/``n`` index LAYERS here (the segment's layer range), not
+    flat-buffer coordinates — the same static-table mechanism, applied to
+    the cache's layer axis instead of the wire buffer's coordinate axis.
+    """
+    segs, run_start = [], 0
+    for l in range(1, len(bits_per_layer) + 1):
+        if l == len(bits_per_layer) or bits_per_layer[l] != bits_per_layer[run_start]:
+            n = l - run_start
+            segs.append(PlanSegment(
+                start=run_start, n=n, padded=n,
+                quant=quant_for_bits(bits_per_layer[run_start], feat_pad),
+                key_tag=len(segs),
+            ))
+            run_start = l
+    return tuple(segs)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Static layout of the paged cache (hashable — safe to close over in
+    jitted functions, like ExchangeConfig)."""
+
+    num_layers: int
+    kv_heads: int
+    head_dim: int
+    page_size: int
+    num_pages: int
+    blocks_per_seq: int  # page-table width (max pages one sequence maps)
+    segments: tuple  # PlanSegment per contiguous same-policy layer range
+
+    @property
+    def feat(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    @property
+    def feat_pad(self) -> int:
+        """Feature vector padded to even length (int4 packs index pairs)."""
+        return self.feat + (self.feat % 2)
+
+    @property
+    def max_len(self) -> int:
+        return self.page_size * self.blocks_per_seq
+
+    def segment_of(self, l: int):
+        """(segment index, PlanSegment) covering layer ``l`` (static)."""
+        for j, seg in enumerate(self.segments):
+            if seg.start <= l < seg.start + seg.n:
+                return j, seg
+        raise IndexError(f"layer {l} outside {self.num_layers} layers")
+
+    def describe(self) -> str:
+        parts = []
+        for seg in self.segments:
+            b = 32 if seg.quant is None else seg.quant.bits
+            parts.append(f"L{seg.start}-{seg.start + seg.n - 1}:int{b}"
+                         if b != 32 else
+                         f"L{seg.start}-{seg.start + seg.n - 1}:fp32")
+        return (f"pages={self.num_pages}x{self.page_size}tok "
+                f"feat={self.feat} [{' '.join(parts)}]")
+
+
+def make_paged_cache_config(
+    cfg: ModelConfig, policy: str, page_size: int, num_pages: int,
+    blocks_per_seq: int,
+) -> PagedCacheConfig:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    feat_pad = kv * hd + (kv * hd) % 2
+    return PagedCacheConfig(
+        num_layers=cfg.num_layers, kv_heads=kv, head_dim=hd,
+        page_size=page_size, num_pages=num_pages,
+        blocks_per_seq=blocks_per_seq,
+        segments=build_layer_segments(layer_bit_policy(cfg, policy), feat_pad),
+    )
+
+
+def blocks_for(pc: PagedCacheConfig, total_len: int) -> int:
+    """Pages one sequence of ``total_len`` tokens needs (ceil)."""
+    return -(-total_len // pc.page_size)
+
+
+# ---------------------------------------------------------------------------
+# Arena init + byte accounting
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(pc: PagedCacheConfig) -> dict:
+    """Zeroed arena arrays, one group per segment (see module docstring)."""
+    cache = {}
+    for j, seg in enumerate(pc.segments):
+        Lj, Pn, T = seg.n, pc.num_pages, pc.page_size
+        if seg.quant is None:
+            shape = (Lj, Pn, T, pc.kv_heads, pc.head_dim)
+            cache[f"seg{j}_k"] = jnp.zeros(shape, jnp.float32)
+            cache[f"seg{j}_v"] = jnp.zeros(shape, jnp.float32)
+        else:
+            W = pc.feat_pad if seg.quant.bits == 8 else pc.feat_pad // 2
+            for kv in ("k", "v"):
+                cache[f"seg{j}_{kv}_payload"] = jnp.zeros((Lj, Pn, T, W), jnp.int8)
+                cache[f"seg{j}_{kv}_norms"] = jnp.zeros((Lj, Pn, T), jnp.float32)
+    return cache
+
+
+def cache_bytes(pc: PagedCacheConfig) -> int:
+    """Bytes the arena actually allocates (static; equals the sum of the
+    live arrays' nbytes — asserted in tests)."""
+    total = 0
+    for seg in pc.segments:
+        per_tok = (
+            2 * pc.feat * 4 if seg.quant is None
+            else 2 * ((pc.feat_pad if seg.quant.bits == 8 else pc.feat_pad // 2) + 4)
+        )
+        total += seg.n * pc.num_pages * pc.page_size * per_tok
+    return total
+
+
+def fp32_cache_bytes(pc: PagedCacheConfig) -> int:
+    """What the same arena would cost stored fp32 (the ratio baseline)."""
+    return pc.num_layers * pc.num_pages * pc.page_size * 2 * pc.feat * 4
+
+
+# ---------------------------------------------------------------------------
+# Per-token quantize / dequantize (one norm bucket per token)
+# ---------------------------------------------------------------------------
+
+
+def _tok_quantize(x: Array, levels: Array, key: Array, q: QuantConfig):
+    """x [..., F] f32 (F == q.bucket_size, even) -> (payload [..., W] int8,
+    norms [...] f32).  Same math as :func:`repro.core.quantization.quantize`
+    with bucket boundaries aligned to tokens."""
+    norms = bucket_norms(x.reshape(-1, q.bucket_size), q.q_norm)
+    norms = norms.reshape(x.shape[:-1])
+    safe = jnp.where(norms > 0, norms, 1.0)
+    u = jnp.clip(jnp.abs(x) / safe[..., None], 0.0, 1.0)
+    idx = _stochastic_round_indices(u, levels, key, q.stochastic)
+    signed = jnp.where(x < 0, -idx, idx)
+    if q.bits == 8:
+        return signed.astype(jnp.int8), norms
+    a = signed[..., 0::2] & 0xF
+    b = signed[..., 1::2] & 0xF
+    return (a | (b << 4)).astype(jnp.uint8).view(jnp.int8), norms
+
+
+def _tok_dequantize(payload: Array, norms: Array, levels: Array,
+                    q: QuantConfig) -> Array:
+    """Inverse of :func:`_tok_quantize` -> [..., F] f32."""
+    if q.bits == 8:
+        signed = payload.astype(jnp.int32)
+    else:
+        p = payload.view(jnp.uint8).astype(jnp.int32)
+        a, b = p & 0xF, (p >> 4) & 0xF
+        a = jnp.where(a >= 8, a - 16, a)
+        b = jnp.where(b >= 8, b - 16, b)
+        signed = jnp.stack([a, b], axis=-1).reshape(*p.shape[:-1], -1)
+    vals = levels[jnp.abs(signed)] * jnp.sign(signed).astype(jnp.float32)
+    return vals * norms[..., None]
+
+
+def _pad_feat(x: Array, feat_pad: int) -> Array:
+    pad = feat_pad - x.shape[-1]
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], axis=-1)
+    return x
+
+
+def _fold(keys: Array, tag: int) -> Array:
+    """fold_in over a [B]-batch of PRNG keys."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, tag))(keys)
+
+
+def _oob(pages: Array, num_pages: int) -> Array:
+    """Map the -1 'unmapped' sentinel to an index that is genuinely
+    out-of-bounds.  jax normalizes negative indices BEFORE the gather/
+    scatter mode check (-1 wraps to the last page even under
+    ``mode='drop'``), so the sentinel must sit past the end, not below
+    zero, for drop/fill semantics to apply."""
+    return jnp.where(pages < 0, num_pages, pages)
+
+
+# ---------------------------------------------------------------------------
+# Page reads / writes
+# ---------------------------------------------------------------------------
+
+
+def write_token(cache: dict, pc: PagedCacheConfig, l: int,
+                k_t: Array, v_t: Array, pages: Array, offs: Array,
+                keys: Array) -> dict:
+    """Write one new token per slot into layer ``l``.
+
+    k_t/v_t [B, KV, hd]; pages/offs [B] int32 — a page of -1 DROPS the
+    write (inactive slot; jax treats negative dynamic indices as
+    out-of-bounds, and ``mode='drop'`` makes that a no-op instead of a
+    clamp).  keys [B]: per-slot PRNG keys for the quantizer noise — the
+    caller derives them from (request seed, position), NOT the slot
+    index, so packing does not change a request's rounding draws.
+    """
+    j, seg = pc.segment_of(l)
+    lj = l - seg.start
+    pages = _oob(pages, pc.num_pages)
+    out = dict(cache)
+    if seg.quant is None:
+        for name, t in ((f"seg{j}_k", k_t), (f"seg{j}_v", v_t)):
+            out[name] = cache[name].at[lj, pages, offs].set(
+                t.astype(jnp.float32), mode="drop")
+        return out
+    levels = uniform_levels(seg.quant.num_levels)
+    B = k_t.shape[0]
+    for tag, name, t in ((0, f"seg{j}_k", k_t), (1, f"seg{j}_v", v_t)):
+        x = _pad_feat(t.reshape(B, -1).astype(jnp.float32), pc.feat_pad)
+        payload, norms = jax.vmap(
+            lambda xb, kb: _tok_quantize(xb, levels, kb, seg.quant)
+        )(x, _fold(keys, tag))
+        out[f"{name}_payload"] = cache[f"{name}_payload"].at[
+            lj, pages, offs].set(payload, mode="drop")
+        out[f"{name}_norms"] = cache[f"{name}_norms"].at[
+            lj, pages, offs].set(norms, mode="drop")
+    return out
+
+
+def write_prompt(cache: dict, pc: PagedCacheConfig, l: int,
+                 k: Array, v: Array, pages: Array, keys: Array) -> dict:
+    """Write a whole prefilled sequence into layer ``l`` in one scatter.
+
+    k/v [B, S, KV, hd] with S == pages.shape[1] * page_size (caller pads
+    the prompt to whole pages; padded positions hold garbage that decode
+    overwrites at its own position before any read can see it — history
+    reads mask ``key_pos < pos``).  pages [B, nblk] int32 (-1 drops).
+    """
+    j, seg = pc.segment_of(l)
+    lj = l - seg.start
+    B, S = k.shape[:2]
+    nblk = pages.shape[1]
+    pages = _oob(pages, pc.num_pages)
+    out = dict(cache)
+    if seg.quant is None:
+        for name, t in ((f"seg{j}_k", k), (f"seg{j}_v", v)):
+            val = t.astype(jnp.float32).reshape(
+                B, nblk, pc.page_size, pc.kv_heads, pc.head_dim)
+            out[name] = cache[name].at[lj, pages].set(val, mode="drop")
+        return out
+    levels = uniform_levels(seg.quant.num_levels)
+    for tag, name, t in ((0, f"seg{j}_k", k), (1, f"seg{j}_v", v)):
+        x = _pad_feat(t.reshape(B, S, -1).astype(jnp.float32), pc.feat_pad)
+        payload, norms = jax.vmap(
+            lambda xb, kb: _tok_quantize(xb, levels, kb, seg.quant)
+        )(x, _fold(keys, tag))
+        out[f"{name}_payload"] = cache[f"{name}_payload"].at[lj, pages].set(
+            payload.reshape(B, nblk, pc.page_size, -1), mode="drop")
+        out[f"{name}_norms"] = cache[f"{name}_norms"].at[lj, pages].set(
+            norms.reshape(B, nblk, pc.page_size), mode="drop")
+    return out
+
+
+def read_kv(cache: dict, pc: PagedCacheConfig, l: int,
+            page_table: Array) -> tuple:
+    """Gather + dequantize a layer's history for every slot.
+
+    page_table [B, nblk] int32 -> k, v [B, nblk * page_size, KV, hd] f32.
+    Unmapped pages (-1) read as zeros (``mode='fill'``); the attention
+    mask drops them anyway (page >= 0 AND key_pos < pos).
+    """
+    j, seg = pc.segment_of(l)
+    lj = l - seg.start
+    B, nblk = page_table.shape
+    T = nblk * pc.page_size
+    page_table = _oob(page_table, pc.num_pages)
+    if seg.quant is None:
+        k = jnp.take(cache[f"seg{j}_k"][lj], page_table, axis=0,
+                     mode="fill", fill_value=0)
+        v = jnp.take(cache[f"seg{j}_v"][lj], page_table, axis=0,
+                     mode="fill", fill_value=0)
+        return (k.reshape(B, T, pc.kv_heads, pc.head_dim),
+                v.reshape(B, T, pc.kv_heads, pc.head_dim))
+    levels = uniform_levels(seg.quant.num_levels)
+    out = []
+    for kv in ("k", "v"):
+        payload = jnp.take(cache[f"seg{j}_{kv}_payload"][lj], page_table,
+                           axis=0, mode="fill", fill_value=0)
+        norms = jnp.take(cache[f"seg{j}_{kv}_norms"][lj], page_table,
+                         axis=0, mode="fill", fill_value=0)
+        deq = _tok_dequantize(payload, norms, levels, seg.quant)
+        out.append(deq[..., :pc.feat].reshape(B, T, pc.kv_heads, pc.head_dim))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator (host-side free list)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator over the arena's pages (host-side, no jax).
+
+    Invariants (tested): a page is never held by two owners, ``free`` of
+    a page not currently held raises, and alloc/free round-trips restore
+    ``n_free`` exactly.  ``alloc`` is all-or-nothing: it returns None
+    (admission waits) rather than a partial grant.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))
+        self._held: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int):
+        if n <= 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._held.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        pages = list(pages)
+        # validate the whole batch before mutating: a double-free (or a
+        # duplicate within one call) must not partially release pages
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate pages in free: {pages}")
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"free of page {p} not currently held")
+        for p in pages:
+            self._held.remove(p)
+            self._free.append(p)

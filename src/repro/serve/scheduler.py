@@ -1,0 +1,121 @@
+"""Continuous-batching request scheduler (host-side state machine, no jax).
+
+Slots are positions in the packed decode batch; pages come from the
+shared :class:`repro.serve.kv_cache.PageAllocator` arena.  Request
+lifecycle::
+
+    submitted ──▶ waiting ──admit──▶ active(slot) ──retire──▶ finished
+                     ▲                  │
+                     └── (stays queued  │  pages freed back to the
+                          while pages   ▼  arena; slot reusable on the
+                          or slots      next admit — mid-decode)
+                          are scarce)
+
+Admission is all-or-nothing per request (every page a request will ever
+touch — prompt AND generation — is reserved at admit time, so an active
+request can never stall mid-decode on arena exhaustion) and greedy in
+FIFO order: a request admits the moment a slot AND its pages are both
+available, including between decode steps of other requests — that is
+the continuous-batching property the tests pin down.  The engine calls
+``admit`` after every ``retire_finished``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list  # token ids
+    max_new: int  # generation budget (greedy decode stops here)
+
+
+@dataclasses.dataclass
+class Slot:
+    req: Request
+    pages: list  # arena pages backing positions [0, len(prompt)+max_new)
+    pos: int  # next decode position (== tokens already in the cache)
+    last_token: int  # token the next decode step consumes
+    out: list  # generated token ids
+
+
+class Scheduler:
+    """FIFO admission over ``n_slots`` packed-batch slots."""
+
+    def __init__(self, n_slots: int, page_size: int, blocks_per_seq: int,
+                 allocator):
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.blocks_per_seq = blocks_per_seq
+        self.allocator = allocator
+        self.waiting: deque = deque()
+        self.slots: list[Optional[Slot]] = [None] * n_slots
+        self.finished: list[Slot] = []
+        self.decode_steps = 0  # bumped by the engine; >0 marks mid-decode
+        self.stats = {
+            "admitted": 0,
+            "retired": 0,
+            "mid_decode_admits": 0,
+            "max_concurrent": 0,
+        }
+
+    def _blocks_for(self, req: Request) -> int:
+        total = len(req.prompt) + req.max_new
+        return -(-total // self.page_size)
+
+    def submit(self, req: Request) -> None:
+        if not req.prompt or req.max_new < 1:
+            raise ValueError(f"request {req.rid}: empty prompt or max_new < 1")
+        if self._blocks_for(req) > self.blocks_per_seq:
+            raise ValueError(
+                f"request {req.rid}: {len(req.prompt)}+{req.max_new} tokens "
+                f"needs {self._blocks_for(req)} pages > page-table width "
+                f"{self.blocks_per_seq}"
+            )
+        self.waiting.append(req)
+
+    def admit(self) -> list:
+        """Fill free slots from the waiting queue; returns the newly
+        admitted [(slot_index, Slot)] for the engine to prefill."""
+        new = []
+        for i in range(self.n_slots):
+            if self.slots[i] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            pages = self.allocator.alloc(self._blocks_for(req))
+            if pages is None:
+                break  # FIFO: don't let a small request starve the head
+            self.waiting.popleft()
+            slot = Slot(req=req, pages=pages, pos=0, last_token=0, out=[])
+            self.slots[i] = slot
+            new.append((i, slot))
+            self.stats["admitted"] += 1
+            if self.decode_steps > 0:
+                self.stats["mid_decode_admits"] += 1
+        self.stats["max_concurrent"] = max(
+            self.stats["max_concurrent"],
+            sum(s is not None for s in self.slots),
+        )
+        return new
+
+    def retire_finished(self) -> list:
+        """Free every slot whose generation budget is spent."""
+        done = []
+        for i, slot in enumerate(self.slots):
+            if slot is not None and len(slot.out) >= slot.req.max_new:
+                self.allocator.free(slot.pages)
+                self.slots[i] = None
+                self.finished.append(slot)
+                done.append(slot)
+                self.stats["retired"] += 1
+        return done
+
+    def active(self) -> list:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)

@@ -63,6 +63,30 @@ def test_fault_tolerance_8dev():
     assert "ALL OK" in r.stdout
 
 
+def test_serve_wire_accounting_8dev():
+    """Serving-path wire accounting: the engine's per-step logit-exchange
+    bytes == the trace-time recorder on 8 devices (compressed path), the
+    analytic total accumulates per packed decode step, and compressed
+    logits move fewer bytes than the exact fp32 exchange."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_serve_wire.py")])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
+def test_serve_cli_8dev():
+    """The serve CLI on 8 forced host devices: paged int8 cache, packed
+    continuous batching, logit exchange reporting wire bytes."""
+    r = _run([
+        "-m", "repro.launch.serve",
+        "--reduced", "--host-devices", "8",
+        "--batch", "2", "--requests", "3", "--prompt-len", "8",
+        "--gen", "6", "--kv-bits", "8", "--logit-exchange", "int8",
+    ])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "logit exchange over 8 devices" in r.stdout
+    assert "mid_decode_admits" in r.stdout
+
+
 def test_train_qgenx_optimizer_8dev():
     """Acceptance: --optimizer qgenx trains via the CLI on 8 devices with
     a compressed exchange and the local-update regime."""
