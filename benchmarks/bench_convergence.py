@@ -16,6 +16,10 @@ Emits the measured restricted-gap decay across T for:
     8 forced host devices, subprocess)
   * drift vs wire across compressed parameter re-centering cadences
     (recenter_every in {0, 8, 4} on top of sync_every=4, 8 host devices)
+  * ERROR FEEDBACK at EQUAL WIRE BUDGET: contractive ef21-topk/ef-randk
+    vs unbiased randk at the same keep fraction (identical 8k-byte
+    pricing per exchange) — toy VI row plus a model-scale trainer row
+    (8 forced host devices, subprocess)
 """
 
 import math
@@ -142,6 +146,30 @@ def run():
     )
     emit("exchange_registry_rate_preservation", 0.0, derived)
 
+    # --- error feedback vs unbiased sparsification at EQUAL wire budget --
+    # same keep fraction -> byte-identical wire bills (asserted), so the
+    # gap difference is purely the estimator: EF21's compensated biased
+    # estimate vs randk's unbiased-but-high-variance rescale
+    vi = cocoercive_quadratic(d=64, seed=1)
+    oracle = relative_noise_oracle(vi, c=0.5)
+    x0 = jnp.asarray(vi.z_star, jnp.float32) + 1.0
+    results = {}
+    for tag, exc in (
+        ("ef21_topk", ExchangeConfig(compressor="ef21-topk",
+                                     ef_topk_frac=0.1)),
+        ("ef_randk", ExchangeConfig(compressor="ef-randk", rand_frac=0.1)),
+        ("randk", ExchangeConfig(compressor="randk", rand_frac=0.1)),
+    ):
+        cfgq = QGenXConfig(variant="de", num_workers=4, exchange=exc)
+        st = qgenx_run(x0, oracle, cfgq, KEY, 2048)
+        results[tag] = (restricted_gap(vi, st.x_avg), float(st.bits_sent))
+    bits = {b for _, b in results.values()}
+    assert len(bits) == 1, results  # the equal-wire premise, enforced
+    derived = ";".join(
+        f"{t}_gap={g:.4f};{t}_bits={b:.2e}" for t, (g, b) in results.items()
+    )
+    emit("ef21_vs_unbiased_equal_wire_toy_vi", 0.0, derived)
+
     # --- de vs optda at equal oracle budget (toy VI loop) ----------------
     # de spends 2 oracle calls + 2 broadcasts per iteration, optda 1+1:
     # at an equal call budget optda runs 2x the iterations for the same
@@ -167,6 +195,7 @@ def run():
     _model_scale_de_vs_optda()
     _sync_every_tradeoff()
     _recenter_tradeoff()
+    _error_feedback_model_scale()
 
 
 def _model_scale_qgenx_vs_extra_adam(steps: int = 12):
@@ -312,6 +341,39 @@ def _recenter_tradeoff(steps: int = 16):
         emit(f"recenter_every{rc}_drift_wire", 0.0,
              f"total_wire={wire:.3e}B;last_sync_drift={last_drift:.3e};"
              f"final_loss={loss:.4f}")
+
+
+def _error_feedback_model_scale(steps: int = 12):
+    """EF21-top-k vs unbiased randk at the SAME keep fraction (identical
+    8k-byte wire bill per exchange — the per-step wire is cross-checked
+    in the derived row) on the reduced LM through the train CLI, 8 forced
+    host devices (subprocess — this process stays single-device)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    pp = os.environ.get("PYTHONPATH")
+    env = {**os.environ, "PYTHONPATH": src + os.pathsep + pp if pp else src}
+    for tag, extra in (
+        ("ef21_topk", ["--compressor", "ef21-topk", "--ef-topk-frac", "0.1"]),
+        ("randk", ["--compressor", "randk", "--rand-frac", "0.1"]),
+    ):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train",
+             "--arch", "tinyllama-1.1b", "--reduced", "--host-devices", "8",
+             "--steps", str(steps), "--batch", "16", "--seq", "32",
+             "--repeat-batch", "--optimizer", "qgenx",
+             "--gamma-scale", "0.02", "--compress-axis", "data"] + extra,
+            cwd=root, env=env, capture_output=True, text=True, timeout=900,
+        )
+        if r.returncode != 0:
+            emit(f"model_scale_{tag}_equal_wire", 0.0,
+                 "ERROR=" + r.stderr[-160:].replace("\n", " "))
+            continue
+        lines = [l for l in r.stdout.splitlines()
+                 if l.startswith("[train] step=")]
+        wire = sum(float(l.split("wire=")[1].split("B")[0]) for l in lines)
+        loss = float(r.stdout.split("final_loss=")[1].split()[0])
+        emit(f"model_scale_{tag}_equal_wire", 0.0,
+             f"total_wire={wire:.3e}B;final_loss={loss:.4f}")
 
 
 if __name__ == "__main__":

@@ -18,21 +18,39 @@ pytree that the caller threads through its step function, which is what
 makes adaptive levels available in model-scale training (the train step
 carries the state; level refreshes are visible in it).
 
-Compressors are a registry (:func:`register_compressor`) behind one
-contract — ``E[compress(v)] = v`` (unbiasedness, Definition 1 / Theorem 1
-of the paper; the same property the wider unbiased-compressor family of
-Beznosikov et al. relies on):
+Compressors are a registry (:func:`register_compressor`) behind a
+TWO-TIER contract, declared per entry as ``Compressor.contract``:
+
+* ``"unbiased"``   — ``E[compress(v)] = v`` (Definition 1 / Theorem 1 of
+  the paper; the property the wider unbiased-compressor family of
+  Beznosikov et al. relies on).
+* ``"contractive"`` — ``E‖compress(v) − v‖² ≤ (1 − α)‖v‖²`` for some
+  α ∈ (0, 1] exposed as ``Compressor.contraction_alpha(n, cfg)``
+  (the EF21 / error-feedback family of Richtárik et al.; biased, so it
+  MUST run with per-worker error memory — see ``ExchangeState.error``).
+
+Registered entries:
 
 * ``none``      — exact ``lax.pmean`` (FP32 control, still shard_map-routed).
 * ``qgenx``     — the paper's bucketed stochastic quantization, bit-exact
   with the legacy ``compressed_pmean`` path (gather / two_phase / leafwise
-  modes, fused Pallas kernels, packed int4 wire format).
+  modes, fused Pallas kernels, packed int4 wire format).  Unbiased.
 * ``randk``     — unbiased rand-K sparsification: each worker keeps a
   uniform random subset of ``rand_frac * n`` coordinates scaled by
   ``n / k`` (classic Rand-K; value+index wire format).
 * ``layerwise`` — per-leaf bit-width policy (Nguyen et al., layer-wise
   quantization): large leaves take the aggressive low-bit config, small
   leaves a conservative 8-bit one, each group bucket-fused separately.
+  Unbiased.
+* ``ef21-topk`` — CONTRACTIVE magnitude top-k with EF21 error feedback:
+  each worker ships the top ``ef_topk_frac * n`` coordinates of the
+  innovation ``g − h`` against its persistent estimate ``h`` (no
+  rescaling — biased but contractive), every device replays the gathered
+  sparse innovations into the replicated ``[K, n]`` memory, and the
+  aggregate is ``mean_k(h_k)``.
+* ``ef-randk``  — the contractive variant of randk: the same EF21
+  memory recursion with a uniform-random support of ``rand_frac * n``
+  coordinates instead of magnitude top-k (and no ``n/k`` scaling).
 
 Wire accounting is honest and lives here too: :func:`exchange_buffer_bytes`
 returns the exact byte-sizes of the buffers handed to collectives, the
@@ -629,7 +647,10 @@ class ExchangeConfig:
         the weighted coordinate histogram in ExchangeState.hist (psum-merged
         across workers) and refreshes ExchangeState.levels every
         ``level_update_every`` pmean calls.
-      rand_frac: randk — fraction of coordinates each worker keeps.
+      rand_frac: randk / ef-randk — fraction of coordinates each worker
+        keeps.
+      ef_topk_frac: ef21-topk — fraction of coordinates each worker keeps
+        (of the innovation against its error memory).
       layerwise_threshold: leaves with more elements than this take the
         low-bit ``quant`` config; the rest take ``quant_small``.
       sync_every: local-update regime (Beznosikov et al. 2023; Zhang &
@@ -693,6 +714,7 @@ class ExchangeConfig:
     qada_sweeps: int = 2
     qada_bisect_iters: int = 20
     rand_frac: float = 0.25
+    ef_topk_frac: float = 0.25
     layerwise_threshold: int = 65536
     sync_every: int = 1
     drift_probe: int = 4096
@@ -709,6 +731,10 @@ class ExchangeConfig:
             raise ValueError("level_schedule='qada' needs level_update_every > 0")
         if not (0.0 < self.rand_frac <= 1.0):
             raise ValueError(f"rand_frac must be in (0, 1], got {self.rand_frac}")
+        if not (0.0 < self.ef_topk_frac <= 1.0):
+            raise ValueError(
+                f"ef_topk_frac must be in (0, 1], got {self.ef_topk_frac}"
+            )
         if self.sync_every < 1:
             raise ValueError(f"sync_every must be >= 1, got {self.sync_every}")
         if self.drift_probe < 1:
@@ -749,19 +775,35 @@ class ExchangeState:
     hist: QAda sufficient statistics accumulated since the last refresh
       ([qada_bins] under the qada schedule, [1] placeholder otherwise).
     step: number of pmean calls performed with this state.
+    error: per-worker error-feedback memory — a ``[num_workers, n]`` f32
+      matrix for the contractive compressors (row k is worker k's
+      persistent gradient estimate ``h_k``; every device replays ALL
+      workers' gathered sparse innovations, so the matrix stays
+      replicated across the exchange axis — bit-identical buffers, which
+      is what makes checkpoint round-trips and guard rollbacks exact);
+      a [1] placeholder for every unbiased compressor.  Sized by
+      ``Exchange.init_state(template, num_workers)``.
     """
 
     levels: Array
     levels_lo: Array
     hist: Array
     step: Array
+    error: Array
 
     def tree_flatten(self):
-        return (self.levels, self.levels_lo, self.hist, self.step), None
+        return (
+            self.levels, self.levels_lo, self.hist, self.step, self.error
+        ), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+
+def _null_error() -> Array:
+    """The [1] error-memory placeholder of every unbiased compressor."""
+    return jnp.zeros((1,), jnp.float32)
 
 
 def null_exchange_state() -> ExchangeState:
@@ -771,6 +813,7 @@ def null_exchange_state() -> ExchangeState:
     return ExchangeState(
         levels=lv, levels_lo=jnp.copy(lv),  # donation-safe: no aliasing
         hist=jnp.zeros((1,), jnp.float32), step=jnp.zeros((), jnp.int32),
+        error=_null_error(),
     )
 
 
@@ -802,12 +845,17 @@ def register_compressor(cls):
 
 def get_compressor(name: str):
     """Registry lookup: ``get_compressor("qgenx").name == "qgenx"``;
-    unknown names raise ValueError listing what IS registered."""
+    unknown names raise ValueError listing what IS registered, with each
+    entry's contract tier (unbiased vs contractive matters to the caller:
+    a contractive compressor needs error memory and a different proof)."""
     try:
         return _REGISTRY[name]
     except KeyError:
+        entries = ", ".join(
+            f"'{n}' ({_REGISTRY[n].contract})" for n in sorted(_REGISTRY)
+        )
         raise ValueError(
-            f"unknown compressor {name!r}; registered: {sorted(_REGISTRY)}"
+            f"unknown compressor {name!r}; registered: {entries}"
         ) from None
 
 
@@ -818,15 +866,21 @@ def registered_compressors() -> tuple:
 
 
 class Compressor:
-    """One unbiased-compression policy (the contract: E[compress(v)] = v).
+    """One compression policy under a declared contract tier.
+
+    ``contract`` is ``"unbiased"`` (E[compress(v)] = v — Definition 1 /
+    Theorem 1) or ``"contractive"`` (E‖compress(v) − v‖² ≤ (1 − α)‖v‖²
+    with ``α = contraction_alpha(n, cfg)`` — the error-feedback family;
+    set ``has_error = True`` so the Exchange threads the per-worker
+    memory).  ``tests/test_compressor_contracts.py`` property-tests every
+    registry entry against its declared tier — a new compressor is
+    contract-tested for free.
 
     ``pmean`` runs inside shard_map and may use collectives; ``compress``
-    is the collective-free per-worker point estimate hat{v} = DEQ(Q(v))
-    used by the simulated-worker paths (Q-GenX loop, WGAN testbed) and by
-    the unbiasedness contract test (which parametrizes over the whole
-    registry — a new compressor is contract-tested for free).
-
-    Minimal unbiasedness check every implementation must satisfy::
+    is the collective-free per-worker point estimate used by the
+    simulated-worker paths (Q-GenX loop, WGAN testbed) and the contract
+    harness.  Minimal unbiased-tier check every implementation must
+    satisfy::
 
         ex = make_exchange(cfg)
         draws = jax.vmap(lambda k: ex.compress(v, state, k))(keys)
@@ -835,21 +889,39 @@ class Compressor:
 
     name = "?"
     has_levels = False
+    has_error = False
+    contract = "unbiased"
 
     def validate(self, cfg: ExchangeConfig) -> None:
         """Reject config combinations this compressor cannot honor (called
         by make_exchange and before any leafwise dispatch)."""
         if cfg.mode == "leafwise" and self.name not in ("qgenx", "none"):
             raise ValueError(
-                f"compressor {self.name!r} has no sharding-preserving "
-                "leafwise path; use mode='gather' or 'two_phase'"
+                f"compressor {self.name!r} ({self.contract} contract) has "
+                "no sharding-preserving leafwise path; use mode='gather' "
+                "or 'two_phase'"
             )
+
+    def contraction_alpha(self, n: int, cfg: ExchangeConfig) -> float:
+        """The α of the contractive tier; only meaningful there."""
+        raise NotImplementedError(
+            f"compressor {self.name!r} declares the {self.contract!r} "
+            "contract, which has no contraction factor"
+        )
 
     def init_levels(self, cfg: ExchangeConfig):
         # distinct buffers, never aliases: ExchangeState is donated by the
         # train loop, and XLA rejects the same buffer donated twice
         lv = jnp.asarray([0.0, 1.0], jnp.float32)
         return lv, jnp.copy(lv)
+
+    def init_error(self, cfg: ExchangeConfig, template, num_workers):
+        """The error-memory slot this compressor carries in ExchangeState
+        (default: the [1] placeholder of the unbiased tier).  ``template``
+        is the pytree the memory must cover (params/grads) and
+        ``num_workers`` the exchange-axis size; both may be None for
+        compressors that do not use them."""
+        return _null_error()
 
     # -- ExchangePlan hooks (static flat-buffer layout) -----------------
 
@@ -1139,6 +1211,204 @@ class RandKCompressor(Compressor):
         return 8.0 * _randk_k(n, cfg)
 
 
+class _ErrorFeedbackCompressor(Compressor):
+    """Shared EF21-style machinery of the contractive tier.
+
+    Per-worker recursion (Richtárik et al., EF21), with C the bare
+    contraction operator (:meth:`compress` — top-k or rand-k support,
+    NO unbiasing rescale)::
+
+        c_k  = C(g_k − h_k)          # sparse innovation, shipped
+        h_k' = h_k + c_k             # persistent per-worker estimate
+        mean = (1/K) Σ_k h_k'        # the aggregate the step consumes
+
+    Wire format matches randk — k f32 values + k int32 indices per
+    worker, all-gathered — so ``wire_bytes == 8k`` and the trace
+    recorder sees exactly that.  The [K, n] memory update applies ALL
+    workers' gathered innovations on every device, which keeps
+    ``ExchangeState.error`` replicated (bit-identical across devices):
+    checkpoint round-trips, guard rollbacks, and the donated-buffer
+    carry all stay exact.  The memory covers the ExchangePlan-packed
+    flat buffer — EF segments are unquantized, so the plan's layout is
+    the legacy flat concatenation with zero padding and the memory
+    length is exactly the live coordinate count.
+
+    Interactions (defined + tested):
+
+    * ``sync_every`` — local (non-sync) steps carry the state through
+      ``lax.cond`` untouched: error memory only advances on steps that
+      actually exchange.
+    * step guard — a rejected step restores the PRE-exchange state, so
+      rejected steps never advance error memory.
+    * ``recenter_every`` / participation ``mask`` — rejected loudly
+      (:meth:`validate` / ``Exchange.pmean*``): the memory tracks
+      gradient innovations, and both features would silently corrupt it.
+    """
+
+    contract = "contractive"
+    has_error = True
+    wire_tag = "ef"
+
+    def _k(self, n: int, cfg: ExchangeConfig) -> int:
+        raise NotImplementedError
+
+    def _support(self, innov, k, cfg, key):
+        """Indices of the k coordinates C keeps (subclass policy)."""
+        raise NotImplementedError
+
+    def validate(self, cfg):
+        super().validate(cfg)
+        if cfg.recenter_every > 0:
+            raise ValueError(
+                f"compressor {self.name!r} (contractive contract) cannot "
+                "re-center parameters: the per-worker error memory tracks "
+                "GRADIENT innovations, and a recenter exchange would fold "
+                "iterate residuals into it — set recenter_every=0"
+            )
+
+    def contraction_alpha(self, n, cfg):
+        return self._k(n, cfg) / float(n)
+
+    def init_error(self, cfg, template, num_workers):
+        if template is None or num_workers is None:
+            # keep init_state() callable without a template (toy-VI loop,
+            # generic helpers); the pmean path raises a pointed error if
+            # this placeholder ever reaches an actual EF exchange
+            return _null_error()
+        n = sum(_size_of(l) for l in jax.tree_util.tree_leaves(template))
+        return jnp.zeros((int(num_workers), n), jnp.float32)
+
+    def _check_error(self, h, n: int):
+        if h.ndim != 2 or h.shape[1] != n:
+            raise ValueError(
+                f"compressor {self.name!r} (contractive contract) needs "
+                f"error memory of shape [num_workers, {n}], found "
+                f"{tuple(h.shape)} — initialize the state with "
+                "ex.init_state(template=params, num_workers=axis_size)"
+            )
+
+    def _ef_exchange(self, flat, cfg, h, key, axis_index):
+        """One EF21 round on the packed flat buffer.  Returns
+        ``(mean, new_error)``; the Exchange threads new_error back into
+        the state."""
+        n = flat.shape[0]
+        self._check_error(h, n)
+        num_workers = h.shape[0]
+        axis_size = jax.lax.psum(1, cfg.axis_name)  # static at trace time
+        if int(axis_size) != num_workers:
+            raise ValueError(
+                f"compressor {self.name!r}: error memory was initialized "
+                f"for {num_workers} workers but the exchange axis "
+                f"{cfg.axis_name!r} has {int(axis_size)} devices"
+            )
+        k = self._k(n, cfg)
+        key = _axis_key(key, cfg.axis_name, axis_index)
+        row = (axis_index if axis_index is not None
+               else jax.lax.axis_index(cfg.axis_name))
+        innov = flat.astype(jnp.float32) - h[row]
+        idx = self._support(innov, k, cfg, key).astype(jnp.int32)
+        vals = innov[idx]
+        _record_wire(f"{self.wire_tag}_vals", vals)
+        _record_wire(f"{self.wire_tag}_idx", idx)
+        all_vals = jax.lax.all_gather(vals, cfg.axis_name)  # [K, k] f32
+        all_idx = jax.lax.all_gather(idx, cfg.axis_name)  # [K, k] i32
+        # every device replays ALL workers' innovations so the [K, n]
+        # memory stays replicated across the exchange axis
+        row_off = jnp.arange(num_workers, dtype=jnp.int32)[:, None] * n
+        h_new = h.reshape(-1).at[(all_idx + row_off).reshape(-1)].add(
+            all_vals.reshape(-1)
+        ).reshape(num_workers, n)
+        return jnp.mean(h_new, axis=0), h_new
+
+    def pmean_ef(self, x, cfg, state, key, axis_index=None):
+        return self._ef_exchange(x, cfg, state.error, key, axis_index)
+
+    def pmean_tree_ef(self, tree, cfg, state, key, axis_index=None):
+        """Packed EF exchange of a pytree.  Always routed through the
+        static ExchangePlan: the EF segment is unquantized, so the plan
+        is the legacy flat concatenation with zero padding (use_plan=False
+        would produce the identical buffer) and the [K, n] memory maps
+        1:1 onto plan offsets."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        axis_size = jax.lax.psum(1, cfg.axis_name)
+        plan = self.plan_for(leaves, cfg, axis_size, "pmean")
+        mean_flat, new_error = self._ef_exchange(
+            plan.pack(leaves), cfg, state.error, key, axis_index
+        )
+        mean = jax.tree_util.tree_unflatten(
+            treedef, plan.unpack(mean_flat, leaves)
+        )
+        return mean, new_error
+
+    def pmean(self, x, cfg, state, key, axis_index=None):
+        raise ValueError(
+            f"compressor {self.name!r} (contractive contract) must be "
+            "called through Exchange.pmean/pmean_tree, which thread the "
+            "error memory back into ExchangeState"
+        )
+
+    def ef_compress(self, v, err, cfg, key):
+        """One worker's collective-free EF21 update (the simulated-worker
+        toy-VI path): ``c = C(v − h); h' = h + c``.  Returns
+        ``(h', h')`` — the contribution to the aggregate IS the new
+        memory row, so ``mean_k`` of the first element reproduces the
+        collective path's aggregate."""
+        n = v.shape[0]
+        k = self._k(n, cfg)
+        innov = v.astype(jnp.float32) - err
+        idx = self._support(innov, k, cfg, key).astype(jnp.int32)
+        h_new = err.at[idx].add(innov[idx])
+        return h_new, h_new
+
+    def compress(self, v, cfg, levels, key):
+        """The bare contraction operator C: keep k coordinates, NO
+        rescale — biased, but E‖C(v) − v‖² ≤ (1 − k/n)‖v‖² (the
+        contract the harness property-tests)."""
+        n = v.shape[0]
+        k = self._k(n, cfg)
+        idx = self._support(v.astype(jnp.float32), k, cfg, key)
+        return jnp.zeros((n,), v.dtype).at[idx].set(v[idx])
+
+    def wire_bytes(self, n, axis_size, cfg):
+        return 8.0 * self._k(n, cfg)  # 4 B value + 4 B index
+
+    def compress_wire_bytes(self, n, cfg):
+        return 8.0 * self._k(n, cfg)
+
+
+@register_compressor
+class EF21TopKCompressor(_ErrorFeedbackCompressor):
+    """EF21 with magnitude top-k: C keeps the ``ef_topk_frac * n``
+    largest-|.| coordinates of the innovation (deterministic, so the
+    contraction E‖C(x) − x‖² ≤ (1 − k/n)‖x‖² holds per draw)."""
+
+    name = "ef21-topk"
+    wire_tag = "ef21"
+
+    def _k(self, n, cfg):
+        return max(1, int(round(cfg.ef_topk_frac * n)))
+
+    def _support(self, innov, k, cfg, key):
+        return jax.lax.top_k(jnp.abs(innov), k)[1]
+
+
+@register_compressor
+class EFRandKCompressor(_ErrorFeedbackCompressor):
+    """Contractive rand-k: the EF21 recursion with a uniform-random
+    support of ``rand_frac * n`` coordinates and NO ``n/k`` rescale
+    (E‖C(x) − x‖² = (1 − k/n)‖x‖² exactly, in expectation over the
+    support draw)."""
+
+    name = "ef-randk"
+    wire_tag = "ef_randk"
+
+    def _k(self, n, cfg):
+        return _randk_k(n, cfg)
+
+    def _support(self, innov, k, cfg, key):
+        return jax.random.permutation(key, innov.shape[0])[:k]
+
+
 @register_compressor
 class LayerwiseCompressor(Compressor):
     """Per-leaf bit-width policy (layer-wise quantization): leaves larger
@@ -1382,13 +1652,19 @@ class Exchange:
 
     # -- state ---------------------------------------------------------
 
-    def init_state(self) -> ExchangeState:
+    def init_state(self, template=None,
+                   num_workers: Optional[int] = None) -> ExchangeState:
+        """Fresh state.  ``template`` (a params/grads-shaped pytree) and
+        ``num_workers`` (the exchange-axis size) size the error-memory
+        slot of contractive compressors; unbiased compressors ignore both
+        (every pre-existing ``init_state()`` call stays valid)."""
         levels, levels_lo = self.compressor.init_levels(self.cfg)
         bins = self.cfg.qada_bins if self.cfg.level_schedule == "qada" else 1
         return ExchangeState(
             levels=levels, levels_lo=levels_lo,
             hist=jnp.zeros((bins,), jnp.float32),
             step=jnp.zeros((), jnp.int32),
+            error=self.compressor.init_error(self.cfg, template, num_workers),
         )
 
     def _qada_active(self) -> bool:
@@ -1462,7 +1738,7 @@ class Exchange:
         )
         return ExchangeState(
             levels=levels, levels_lo=levels_lo,
-            hist=hist, step=state.step + 1,
+            hist=hist, step=state.step + 1, error=state.error,
         )
 
     # -- exchanges -----------------------------------------------------
@@ -1489,6 +1765,14 @@ class Exchange:
         shrink is a launcher concern), but the WIRE accounting the train
         step emits prices only alive workers.
         """
+        if self.compressor.has_error:
+            self._reject_mask(mask)
+            mean, err = self.compressor.pmean_ef(
+                x, self.cfg, state, key, axis_index
+            )
+            return mean, dataclasses.replace(
+                self._advance(state, None), error=err
+            )
         if mask is not None:
             x = jnp.where(mask > 0, x, jnp.zeros((), x.dtype))
         mean = self.compressor.pmean(x, self.cfg, state, key, axis_index)
@@ -1503,6 +1787,14 @@ class Exchange:
         over the alive set — see :meth:`pmean`)."""
         if self.cfg.mode == "leafwise":
             return self.pmean_leafwise(tree, state, key, axis_index, mask)
+        if self.compressor.has_error:
+            self._reject_mask(mask)
+            mean, err = self.compressor.pmean_tree_ef(
+                tree, self.cfg, state, key, axis_index
+            )
+            return mean, dataclasses.replace(
+                self._advance(state, None), error=err
+            )
         if mask is not None:
             tree = _mask_tree(tree, mask)
         mean = self.compressor.pmean_tree(tree, self.cfg, state, key, axis_index)
@@ -1519,6 +1811,18 @@ class Exchange:
         mean = self.compressor.pmean_tree(tree, cfg, state, key, axis_index)
         hist = self._leafwise_hist(tree) if self._qada_active() else None
         return self._finish(mean, state, hist, mask)
+
+    def _reject_mask(self, mask):
+        """Error feedback + partial participation is undefined here: a
+        dead worker's memory would go stale while the alive-set renorm
+        rescales its stored innovations — reject at trace time rather
+        than aggregate garbage."""
+        if mask is not None:
+            raise ValueError(
+                f"compressor {self.cfg.compressor!r} (contractive "
+                "contract) does not support partial-participation masks; "
+                "run error-feedback exchanges with full participation"
+            )
 
     def _finish(self, mean, state: ExchangeState, hist, mask):
         """Common masked-exchange epilogue: renormalize the mean over the

@@ -43,6 +43,15 @@ Wire accounting stays honest about the layout change: a planned
 paid one per leaf — the delta is documented and tested, never silently
 absorbed.
 
+The error-feedback compressors (ef21-topk / ef-randk) also route their
+tree exchange through a plan — ``pack`` assembles the one flat buffer
+their [num_workers, n] error memory indexes into, and ``unpack`` slices
+the compensated mean back out.  Their segments are UNQUANTIZED (no level
+table, no bucket quota), so the plan adds zero padding and the packed
+length equals the plain sum of leaf sizes: the error matrix's column
+count, the top-k support space, and the analytic 8k-byte wire bill all
+agree on the same ``n`` by construction.
+
 This module is layout + dispatch only; it imports nothing from
 :mod:`repro.core.exchange` (the Exchange/compressor registry builds plans
 through :func:`build_plan` and owns all collective logic).

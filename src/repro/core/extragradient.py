@@ -97,10 +97,11 @@ class QGenXState:
     x_avg: Array  # running ergodic average of X_{t+1/2}
     t: Array  # iteration counter
     bits_sent: Array  # cumulative per-worker communication bits (fixed-width)
+    ef_err: Array  # per-worker [K, d] error-feedback memory (zeros when off)
 
     def tree_flatten(self):
         return (
-            (self.x, self.y, self.sum_sq, self.prev_half, self.levels, self.x_avg, self.t, self.bits_sent),
+            (self.x, self.y, self.sum_sq, self.prev_half, self.levels, self.x_avg, self.t, self.bits_sent, self.ef_err),
             None,
         )
 
@@ -128,6 +129,7 @@ def qgenx_init(x0: Array, cfg: QGenXConfig) -> QGenXState:
         x_avg=jnp.zeros_like(x0, dtype=jnp.float32),
         t=jnp.zeros((), jnp.int32),
         bits_sent=jnp.zeros((), jnp.float32),
+        ef_err=jnp.zeros((cfg.num_workers, d), jnp.float32),
     )
 
 
@@ -194,6 +196,18 @@ def qgenx_step(
 
     gamma_t = _gamma(state.sum_sq, K, cfg.gamma_scale)
 
+    # error feedback (contractive compressors): per-worker memory rides in
+    # state.ef_err [K, d] and threads SEQUENTIALLY through this step's
+    # exchange points — ef_compress returns (contribution, new memory row).
+    # Unused (and untouched — identical jaxpr contribution) otherwise.
+    has_ef = ex is not None and ex.compressor.has_error
+    ef_err = state.ef_err
+
+    def _ef(vs, errs, keys):
+        return jax.vmap(
+            lambda v, e, k: ex.compressor.ef_compress(v, e, ex.cfg, k)
+        )(vs, errs, keys)
+
     # ---- extrapolation feedback Vhat_{k,t} per the oracle schedule ------
     if method.uses_prev_half:  # optda: carried feedback, no fresh broadcast
         v_hat_t = state.prev_half
@@ -201,9 +215,12 @@ def qgenx_step(
         keys_o = jax.random.split(k_o1, K)
         v_t = jax.vmap(lambda k: oracle(state.x, k))(keys_o)
         keys_q = jax.random.split(k_q1, K)
-        v_hat_t = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, ex))(
-            v_t, keys_q
-        )
+        if has_ef:
+            v_hat_t, ef_err = _ef(v_t, ef_err, keys_q)
+        else:
+            v_hat_t = jax.vmap(
+                lambda v, k: _maybe_quantize(v, state.levels, k, ex)
+            )(v_t, keys_q)
     else:  # da: zero extrapolation feedback, nothing to communicate
         v_hat_t = jnp.zeros((K, d), jnp.float32)
 
@@ -213,9 +230,12 @@ def qgenx_step(
     keys_o2 = jax.random.split(k_o2, K)
     v_half = jax.vmap(lambda k: oracle(x_half, k))(keys_o2)
     keys_q2 = jax.random.split(k_q2, K)
-    v_hat_half = jax.vmap(lambda v, k: _maybe_quantize(v, state.levels, k, ex))(
-        v_half, keys_q2
-    )
+    if has_ef:
+        v_hat_half, ef_err = _ef(v_half, ef_err, keys_q2)
+    else:
+        v_hat_half = jax.vmap(
+            lambda v, k: _maybe_quantize(v, state.levels, k, ex)
+        )(v_half, keys_q2)
 
     y_next = dual_step(state.y, jnp.sum(v_hat_half, axis=0) / K)
 
@@ -244,6 +264,7 @@ def qgenx_step(
         x_avg=x_avg,
         t=t_next,
         bits_sent=state.bits_sent + method.exchanges * _per_iter_bits(d, ex),
+        ef_err=ef_err,
     )
 
 

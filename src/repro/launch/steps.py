@@ -53,6 +53,18 @@ small f32 probe of the params is pmean'd (recorded as wire traffic) to
 emit ``metrics["param_drift"]`` — the RMS per-coordinate deviation of the
 drifted local params from their cross-worker mean.  ``sync_every=1`` is
 byte-identical to the ungated path (no cond in the jaxpr).
+
+Error feedback (``--compressor ef21-topk`` / ``ef-randk``): the
+contractive compressors carry per-worker memory in ``ExchangeState.error``
+(sized by ``Exchange.init_state(template=params, num_workers=axis_size)``
+— the train CLI does this).  Its semantics fall out of the existing state
+threading: non-sync local steps carry ``ex_state`` through ``lax.cond``
+untouched (memory only advances on real exchanges), and a guard-rejected
+step restores the PRE-exchange state, so rejected steps never advance
+error memory.  ``recenter_every`` and partial-participation masks are
+rejected loudly at build/trace time for these compressors, and the qgenx
+gamma statistic switches to the compensated (exchanged) estimates — the
+raw local gradients are not a proxy for what the EF recursion applies.
 """
 
 from __future__ import annotations
@@ -273,8 +285,15 @@ def make_train_step(
             ghat2, ex_state = exchange_grads(g2, ex_state, k2)
             # sum_k ||Vbar_{t} - g_{k,t+1/2}||^2 — the carried feedback vs
             # this worker's fresh half-step oracle (at K=1 uncompressed
-            # this is exactly the toy optda statistic; parity-tested)
-            sq = qgenx_opt.local_sq_diff(ghat1, g2)
+            # this is exactly the toy optda statistic; parity-tested).
+            # Under a CONTRACTIVE compressor the raw local gradient is
+            # not a proxy for the estimate the recursion applies, so the
+            # gamma statistic uses the compensated (exchanged) estimate
+            # instead — Python-gated to keep the unbiased jaxpr bit-exact.
+            if ex is not None and ex.compressor.has_error:
+                sq = qgenx_opt.local_sq_diff(ghat1, ghat2)
+            else:
+                sq = qgenx_opt.local_sq_diff(ghat1, g2)
             if ex is not None:
                 sq = jax.lax.psum(sq, axis_name)
             new_params, new_state = qgenx_opt.commit(
@@ -294,7 +313,13 @@ def make_train_step(
             loss, g2 = gfn(params_half, batch)
             ghat2, ex_state = exchange_grads(g2, ex_state, k2)
             # sum_k ||g_{k,t} - g_{k,t+1/2}||^2 — the gamma-rule statistic
-            sq = qgenx_opt.local_sq_diff(g1, g2)
+            # (from the raw local oracles; under a contractive compressor
+            # the COMPENSATED estimates replace them — the locals are not
+            # a proxy for what the EF recursion actually applies)
+            if ex is not None and ex.compressor.has_error:
+                sq = qgenx_opt.local_sq_diff(ghat1, ghat2)
+            else:
+                sq = qgenx_opt.local_sq_diff(g1, g2)
             if ex is not None:
                 sq = jax.lax.psum(sq, axis_name)
             new_params, new_state = qgenx_opt.commit(

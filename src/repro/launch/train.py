@@ -4,10 +4,11 @@ Runs on whatever devices are visible (1 CPU, 8 forced host devices via
 --host-devices, or a real TPU slice).  The paper's technique is enabled
 with --compression int8|int4 (+ --compress-axis data for the DDP setting);
 the full exchange subsystem is reachable from here: --compressor selects
-the registered compressor (qgenx | randk | layerwise | none),
---level-schedule qada turns on adaptive levels (QAda, Section 3.3) carried
-in the explicit ExchangeState, and --use-pallas routes the exchange
-through the fused Pallas kernels.
+the registered compressor (qgenx | randk | layerwise | none, plus the
+contractive error-feedback entries ef21-topk | ef-randk, whose per-worker
+memory rides in ExchangeState.error), --level-schedule qada turns on
+adaptive levels (QAda, Section 3.3) carried in the explicit ExchangeState,
+and --use-pallas routes the exchange through the fused Pallas kernels.
 
 Example (CPU, reduced model, compressed 8-way DP exchange):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
@@ -88,6 +89,7 @@ def build_exchange_config(args, n_dev: int):
         level_schedule=args.level_schedule,
         level_update_every=args.level_update_every,
         rand_frac=args.rand_frac,
+        ef_topk_frac=args.ef_topk_frac,
         sync_every=args.sync_every,
         recenter_every=args.recenter_every,
         use_plan=not args.no_exchange_plan,
@@ -129,7 +131,11 @@ def main(argv=None):
     ap.add_argument("--level-update-every", type=int, default=0,
                     help="QAda refresh period in exchange calls (qada schedule)")
     ap.add_argument("--rand-frac", type=float, default=0.25,
-                    help="randk: fraction of coordinates kept per worker")
+                    help="randk/ef-randk: fraction of coordinates kept "
+                         "per worker")
+    ap.add_argument("--ef-topk-frac", type=float, default=0.25,
+                    help="ef21-topk: fraction of innovation coordinates "
+                         "each worker ships (error-feedback top-k)")
     ap.add_argument("--sync-every", type=int, default=1,
                     help="local-update regime: K local steps between "
                          "compressed exchanges (1 = exchange every step)")
@@ -182,7 +188,10 @@ def main(argv=None):
 
     ex_cfg = build_exchange_config(args, n_dev)
     ex = make_exchange(ex_cfg) if ex_cfg is not None else None
-    ex_state = ex.init_state() if ex is not None else null_exchange_state()
+    # template + axis size let contractive compressors size their
+    # per-worker error memory; unbiased compressors ignore both
+    ex_state = (ex.init_state(template=params, num_workers=n_dev)
+                if ex is not None else null_exchange_state())
     if ex is not None:
         print(f"[train] exchange: compressor={ex_cfg.compressor} "
               f"mode={ex_cfg.mode} axis={ex_cfg.axis_name} "

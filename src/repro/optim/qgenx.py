@@ -43,10 +43,16 @@ DESIGN.md §7:
   center is ``X_1`` itself (``Y_1 = 0``), the standard dual-averaging
   re-centering; for ``X_1 = 0`` the two recursions coincide bit-for-bit
   (that identity is the parity test).
-* **The step-size statistic uses the uncompressed local gradients.**
-  Algorithm 1's ``Vhat`` are the per-worker compressed duals, which the
-  collective exchange never materializes per-worker at model scale; the
-  raw local oracle difference is the available sufficient statistic.
+* **The step-size statistic uses the uncompressed local gradients —
+  for unbiased compressors.**  Algorithm 1's ``Vhat`` are the per-worker
+  compressed duals, which the collective exchange never materializes
+  per-worker at model scale; the raw local oracle difference is the
+  available sufficient statistic, and for unbiased compressors it is an
+  unbiased proxy.  Under a CONTRACTIVE compressor (ef21-topk / ef-randk)
+  that proxy is wrong — the error-compensated aggregate is biased
+  towards the memory, not the raw gradient — so ``make_train_step``
+  switches the statistic to the exchanged (compensated) estimates
+  whenever ``Exchange.compressor.has_error`` is set.
 
 Example (the shapes ``make_train_step`` drives)::
 

@@ -1,0 +1,225 @@
+"""Property-based contract harness over the compressor registry.
+
+Every registered compressor declares a contract tier
+(``Compressor.contract``), and this file property-tests each entry
+against its declared tier — driven by ``hypothesis`` when installed and
+by the deterministic fallback in ``tests/_hypothesis_compat.py`` on a
+bare container (the CI no-deps job):
+
+* ``unbiased``    — E[compress(v)] = v (Definition 1 / Theorem 1);
+* ``contractive`` — E‖compress(v) − v‖² ≤ (1 − α)‖v‖² with
+  α = ``contraction_alpha(n, cfg)`` (the EF21 family);
+* dtype/shape preservation of ``compress`` / ``compress_tree``;
+* wire-bytes monotonicity in bits (4-bit ≤ 8-bit at fixed n/mode), over
+  the bits {4, 8} × mode {gather, two_phase} grid;
+* the equal-wire-budget premise: ef21-topk / ef-randk price exactly like
+  randk at the same keep fraction (8k bytes: k values + k indices);
+* the convergence claim pinned in tier-1 (not only the bench sweep):
+  EF21-top-k reaches a LOWER toy-VI gap than unbiased randk at equal
+  wire budget (seeded, tolerance-gated).
+
+All variation is drawn through ``given`` strategies (never combined with
+pytest.mark.parametrize): the fallback shim's ``@given`` produces a
+zero-argument wrapper, so strategy-driven tests run identically with and
+without real hypothesis.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.exchange import (
+    ExchangeConfig,
+    get_compressor,
+    make_exchange,
+    registered_compressors,
+)
+from repro.core.quantization import QuantConfig
+
+DIMS = (64, 257, 512)  # 257: not a bucket multiple — exercises padding
+BITS = (4, 8)
+MODES = ("gather", "two_phase")
+
+
+def _cfg(name: str, bits: int = 8, mode: str = "two_phase") -> ExchangeConfig:
+    """A representative config per compressor at the given bit width."""
+    quant = QuantConfig(num_levels=15 if bits == 8 else 5, bits=bits,
+                        bucket_size=64, q_norm=math.inf)
+    if name == "qgenx":
+        return ExchangeConfig(compressor="qgenx", quant=quant, mode=mode)
+    if name == "layerwise":
+        return ExchangeConfig(compressor="layerwise", quant=quant,
+                              layerwise_threshold=128, mode=mode)
+    if name == "randk":
+        return ExchangeConfig(compressor="randk", rand_frac=0.25, mode=mode)
+    if name == "ef-randk":
+        return ExchangeConfig(compressor="ef-randk", rand_frac=0.25,
+                              mode=mode)
+    if name == "ef21-topk":
+        return ExchangeConfig(compressor="ef21-topk", ef_topk_frac=0.25,
+                              mode=mode)
+    return ExchangeConfig(compressor=name, mode=mode)
+
+
+def _tier(contract: str) -> tuple:
+    return tuple(n for n in registered_compressors()
+                 if get_compressor(n).contract == contract)
+
+
+def test_every_entry_declares_a_contract_tier():
+    """The registry is exhaustively tiered: each entry declares a known
+    contract, contractive entries expose a usable α and carry error
+    memory, and unbiased entries refuse to invent one."""
+    names = registered_compressors()
+    assert set(_tier("unbiased")) | set(_tier("contractive")) == set(names)
+    for name in names:
+        comp = get_compressor(name)
+        if comp.contract == "contractive":
+            assert comp.has_error
+            alpha = comp.contraction_alpha(512, _cfg(name))
+            assert 0.0 < alpha <= 1.0
+        else:
+            with pytest.raises(NotImplementedError):
+                comp.contraction_alpha(512, _cfg(name))
+
+
+@settings(max_examples=6, deadline=None)
+@given(dim=st.sampled_from(DIMS), bits=st.sampled_from(BITS),
+       mode=st.sampled_from(MODES), seed=st.integers(0, 2 ** 16))
+def test_unbiased_tier_expectation(dim, bits, mode, seed):
+    """E[compress(v)] = v for every unbiased-tier entry, at this draw's
+    (dim, bits, mode): the per-coordinate MC average over many keys must
+    land within its own 5σ band around v."""
+    trials = 512
+    v = jax.random.normal(jax.random.PRNGKey(seed), (dim,), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), trials)
+    for name in _tier("unbiased"):
+        ex = make_exchange(_cfg(name, bits, mode))
+        state = ex.init_state()
+        outs = jax.jit(jax.vmap(lambda k: ex.compress(v, state, k)))(keys)
+        est = np.asarray(jnp.mean(outs, axis=0))
+        std = np.asarray(jnp.std(outs, axis=0))
+        err = np.abs(est - np.asarray(v))
+        tol = 5.0 * std / math.sqrt(trials) + 1e-6
+        frac_bad = float(np.mean(err > tol))
+        assert frac_bad < 0.02, (name, dim, bits, mode, frac_bad)
+
+
+@settings(max_examples=6, deadline=None)
+@given(dim=st.sampled_from(DIMS), bits=st.sampled_from(BITS),
+       mode=st.sampled_from(MODES), seed=st.integers(0, 2 ** 16))
+def test_contractive_tier_contraction_factor(dim, bits, mode, seed):
+    """E‖C(v) − v‖² ≤ (1 − α)‖v‖² for every contractive-tier entry.
+
+    ef21-topk is deterministic (the bound holds per draw, strictly for
+    non-uniform v); ef-randk meets it with EQUALITY in expectation over
+    the support draw — so the assertion allows the MC mean its own 5σ
+    sampling band above the bound, nothing more."""
+    trials = 256
+    v = jax.random.normal(jax.random.PRNGKey(seed), (dim,), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), trials)
+    norm_sq = float(jnp.sum(v * v))
+    for name in _tier("contractive"):
+        ex = make_exchange(_cfg(name, bits, mode))
+        state = ex.init_state()
+        outs = jax.jit(jax.vmap(lambda k: ex.compress(v, state, k)))(keys)
+        sq = np.asarray(jnp.sum((outs - v[None]) ** 2, axis=1))
+        alpha = ex.compressor.contraction_alpha(dim, ex.cfg)
+        bound = (1.0 - alpha) * norm_sq
+        slack = 5.0 * float(sq.std()) / math.sqrt(trials)
+        assert float(sq.mean()) <= bound + slack + 1e-5, (
+            name, dim, bits, mode, float(sq.mean()), bound
+        )
+
+
+@settings(max_examples=6, deadline=None)
+@given(dim=st.sampled_from(DIMS), bits=st.sampled_from(BITS),
+       mode=st.sampled_from(MODES), seed=st.integers(0, 2 ** 16))
+def test_compress_preserves_shape_and_dtype(dim, bits, mode, seed):
+    """compress keeps the flat shape/dtype; compress_tree keeps every
+    leaf's shape and dtype — for the whole registry."""
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (dim,), jnp.float32)
+    tree = {
+        "w": jax.random.normal(key, (dim // 2, 2), jnp.float32),
+        "b": jax.random.normal(key, (3,), jnp.float32),
+    }
+    for name in registered_compressors():
+        ex = make_exchange(_cfg(name, bits, mode))
+        state = ex.init_state()
+        out = ex.compress(v, state, key)
+        assert out.shape == v.shape and out.dtype == v.dtype, name
+        out_t = ex.compress_tree(tree, key, levels=state.levels)
+        for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(out_t)[0],
+        ):
+            assert la.shape == lb.shape and la.dtype == lb.dtype, (name, pa)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(64, 4096), mode=st.sampled_from(MODES),
+       axis_size=st.sampled_from((2, 4, 8)))
+def test_wire_bytes_monotone_in_bits(n, mode, axis_size):
+    """Dropping 8 → 4 bits never increases the analytic wire bytes —
+    for every compressor, for both the collective-operand accounting and
+    the per-worker broadcast accounting (sparsifiers are bit-width
+    independent: equality is allowed, growth is not)."""
+    for name in registered_compressors():
+        ex4 = make_exchange(_cfg(name, 4, mode))
+        ex8 = make_exchange(_cfg(name, 8, mode))
+        w4, w8 = ex4.wire_bytes(n, axis_size), ex8.wire_bytes(n, axis_size)
+        assert 0.0 <= w4 <= w8, (name, n, mode, w4, w8)
+        c4 = ex4.compress_wire_bytes(n)
+        c8 = ex8.compress_wire_bytes(n)
+        assert 0.0 <= c4 <= c8, (name, n, mode, c4, c8)
+
+
+def test_ef_wire_matches_randk_at_equal_frac():
+    """The equal-wire-budget premise of the convergence comparison: at
+    the same keep fraction, both EF compressors price exactly like
+    unbiased randk (k f32 values + k int32 indices = 8k bytes)."""
+    for n in (64, 1000, 4096):
+        for frac in (0.05, 0.25):
+            ref = make_exchange(ExchangeConfig(
+                compressor="randk", rand_frac=frac)).wire_bytes(n, 8)
+            ef21 = make_exchange(ExchangeConfig(
+                compressor="ef21-topk", ef_topk_frac=frac)).wire_bytes(n, 8)
+            efr = make_exchange(ExchangeConfig(
+                compressor="ef-randk", rand_frac=frac)).wire_bytes(n, 8)
+            assert ref == ef21 == efr, (n, frac, ref, ef21, efr)
+
+
+def test_ef21_topk_beats_unbiased_randk_at_equal_wire():
+    """The tier-1 pin of the bench_convergence claim: on the cocoercive
+    toy VI at the SAME per-iteration wire budget (keep fraction 0.1,
+    identical 8k-byte pricing — asserted), EF21-top-k reaches a clearly
+    lower restricted gap than unbiased randk.  Seeded and tolerance-gated:
+    the measured margin is ~20x, the gate only asks for 2x."""
+    from repro.core.extragradient import QGenXConfig, qgenx_run
+    from repro.core.vi import (
+        cocoercive_quadratic,
+        relative_noise_oracle,
+        restricted_gap,
+    )
+
+    vi = cocoercive_quadratic(d=64, seed=1)
+    oracle = relative_noise_oracle(vi, c=0.5)
+    x0 = jnp.asarray(vi.z_star, jnp.float32) + 1.0
+    key = jax.random.PRNGKey(0)
+    results = {}
+    for tag, exc in (
+        ("ef21", ExchangeConfig(compressor="ef21-topk", ef_topk_frac=0.1)),
+        ("randk", ExchangeConfig(compressor="randk", rand_frac=0.1)),
+    ):
+        cfg = QGenXConfig(variant="de", num_workers=4, exchange=exc)
+        st_out = qgenx_run(x0, oracle, cfg, key, 1024)
+        results[tag] = (restricted_gap(vi, st_out.x_avg),
+                        float(st_out.bits_sent))
+    (gap_ef, bits_ef), (gap_rk, bits_rk) = results["ef21"], results["randk"]
+    assert bits_ef == bits_rk  # equal wire budget, by construction
+    assert gap_ef < 0.5 * gap_rk, (gap_ef, gap_rk)

@@ -4,8 +4,9 @@ Covers the redesign's contracts:
 
 * bit-exact parity of ``Exchange.pmean`` with the legacy
   ``compressed_pmean`` across the full (bits, mode, use_pallas) grid;
-* the unbiasedness contract ``E[compress(v)] = v`` for EVERY registered
-  compressor;
+* the unbiasedness contract ``E[compress(v)] = v`` for every registered
+  compressor of the UNBIASED tier (the contractive tier's properties live
+  in tests/test_compressor_contracts.py);
 * the ``use_pallas``/kernel-flag forwarding regression: a train step
   built with ``use_pallas=True`` actually routes through the fused Pallas
   kernels (the pre-redesign ``make_train_step`` dropped the flags on the
@@ -63,7 +64,21 @@ def _contract_config(name: str) -> ExchangeConfig:
         )
     if name == "randk":
         return ExchangeConfig(compressor="randk", rand_frac=0.25)
+    if name == "ef-randk":
+        return ExchangeConfig(compressor="ef-randk", rand_frac=0.25)
+    if name == "ef21-topk":
+        return ExchangeConfig(compressor="ef21-topk", ef_topk_frac=0.25)
     return ExchangeConfig(compressor=name)
+
+
+def _unbiased_compressors() -> tuple:
+    """Registry entries under the unbiased contract tier — the only ones
+    the E[compress(v)] = v properties apply to (the contractive tier has
+    its own harness: tests/test_compressor_contracts.py)."""
+    from repro.core.exchange import get_compressor
+
+    return tuple(n for n in registered_compressors()
+                 if get_compressor(n).contract == "unbiased")
 
 
 # ---------------------------------------------------------------------------
@@ -152,9 +167,9 @@ def test_pmean_tree_matches_legacy_tree():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("name", registered_compressors())
+@pytest.mark.parametrize("name", _unbiased_compressors())
 def test_compressor_unbiasedness_contract(name):
-    """E[compress(v)] = v for every compressor in the registry (the
+    """E[compress(v)] = v for every unbiased-tier compressor (the
     property Theorem 1 and the whole rate analysis rest on)."""
     ex = make_exchange(_contract_config(name))
     state = ex.init_state()
@@ -173,7 +188,7 @@ def test_compressor_unbiasedness_contract(name):
     assert frac_bad < 0.01, (name, frac_bad, err.max())
 
 
-@pytest.mark.parametrize("name", registered_compressors())
+@pytest.mark.parametrize("name", _unbiased_compressors())
 def test_compressor_pmean_replicated_and_unbiased_1dev(name):
     """pmean on a 1-device mesh: shape-preserving and unbiased vs x."""
     ex = make_exchange(dataclasses.replace(
@@ -427,7 +442,8 @@ def test_qada_refreshes_both_layerwise_tables():
                            np.asarray(state.levels_lo), atol=1e-4)
 
 
-@pytest.mark.parametrize("name", ["layerwise", "randk"])
+@pytest.mark.parametrize("name", ["layerwise", "randk", "ef21-topk",
+                                  "ef-randk"])
 def test_leafwise_without_a_leafwise_path_is_loud(name):
     """Compressors without a sharding-preserving per-leaf exchange must
     reject mode='leafwise' instead of silently flat-concatenating."""
@@ -470,7 +486,30 @@ def test_wire_metric_matches_recorder_1dev(mode, qada):
 
 def test_registry_has_scenario_diversity():
     names = registered_compressors()
-    assert {"none", "qgenx", "randk", "layerwise"} <= set(names)
+    assert {"none", "qgenx", "randk", "layerwise",
+            "ef21-topk", "ef-randk"} <= set(names)
+
+
+def test_unknown_compressor_error_names_contract_tiers():
+    """Satellite fix: the registry error lists every entry WITH its
+    contract tier, so the caller knows what each alternative promises."""
+    with pytest.raises(ValueError, match=r"'ef21-topk' \(contractive\)"):
+        make_exchange(ExchangeConfig(compressor="nope"))
+    with pytest.raises(ValueError, match=r"'qgenx' \(unbiased\)"):
+        make_exchange(ExchangeConfig(compressor="nope"))
+
+
+def test_ef_rejects_recenter_and_mask():
+    """EF + recenter is rejected at build time; EF + participation mask
+    at trace time — both name the contractive contract."""
+    with pytest.raises(ValueError, match="contractive contract"):
+        make_exchange(ExchangeConfig(compressor="ef21-topk",
+                                     recenter_every=4))
+    ex = make_exchange(ExchangeConfig(compressor="ef-randk"))
+    st = ex.init_state()
+    with pytest.raises(ValueError, match="partial-participation"):
+        ex.pmean(jnp.zeros((8,)), st, jax.random.PRNGKey(0),
+                 mask=jnp.float32(1.0))
 
 
 def test_unknown_compressor_is_loud():
@@ -491,6 +530,18 @@ def test_qada_requires_update_period():
 def test_exchange_state_is_pytree():
     st = null_exchange_state()
     leaves = jax.tree_util.tree_leaves(st)
-    assert len(leaves) == 4
+    assert len(leaves) == 5  # levels, levels_lo, hist, step, error
     st2 = jax.tree_util.tree_map(lambda x: x, st)
     assert isinstance(st2, ExchangeState)
+
+
+def test_ef_error_memory_sizing():
+    """init_state sizes the error slot from (template, num_workers) for
+    contractive compressors; unbiased ones keep the [1] placeholder."""
+    tree = {"a": jnp.zeros((4, 6)), "b": jnp.zeros((10,))}
+    ex = make_exchange(ExchangeConfig(compressor="ef21-topk"))
+    st = ex.init_state(template=tree, num_workers=8)
+    assert st.error.shape == (8, 34)
+    assert ex.init_state().error.shape == (1,)  # placeholder without args
+    exq = make_exchange(_contract_config("randk"))
+    assert exq.init_state(template=tree, num_workers=8).error.shape == (1,)

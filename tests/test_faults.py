@@ -312,6 +312,33 @@ def test_structure_mismatch_does_not_walk_back(tmp_path):
                                   np.full((4, 3), 2.0, np.float32))
 
 
+def test_legacy_checkpoint_without_error_slot_resets_named_aux(tmp_path):
+    """Checkpoints written before the EF error slot carry a 4-child
+    ex_state (levels, levels_lo, hist, step); restoring into today's
+    5-child ExchangeState must fail LOUDLY by default — and under
+    ``allow_reset=("ex_state",)`` (the ``--allow-ckpt-reset`` path)
+    restore everything else while reporting exactly that one named
+    auxiliary tree as reset."""
+    d = str(tmp_path)
+    ex = make_exchange(ExchangeConfig(
+        compressor="qgenx", quant=QuantConfig(num_levels=15, bucket_size=64)))
+    st = ex.init_state()
+    # a plain 4-tuple flattens to the same positional keys "0".."3" the
+    # old 4-field ExchangeState produced
+    legacy = {"params": _trees()["params"],
+              "ex_state": (st.levels, st.levels_lo, st.hist, st.step)}
+    checkpointing.save(d, 7, legacy)
+    templates = {"params": _trees()["params"], "ex_state": st}
+    with pytest.raises(checkpointing.CheckpointStructureError) as ei:
+        checkpointing.restore_with_fallback(d, templates)
+    assert ei.value.tree == "ex_state" and "keys differ" in ei.value.detail
+    step, trees, reset = checkpointing.restore_with_fallback(
+        d, templates, allow_reset=("ex_state",))
+    assert step == 7 and reset == ("ex_state",) and "ex_state" not in trees
+    np.testing.assert_array_equal(np.asarray(trees["params"]["w"]),
+                                  np.ones((4, 3), np.float32))
+
+
 def test_bounded_retry(tmp_path):
     d = str(tmp_path)
     for s in (1, 2, 3, 4):

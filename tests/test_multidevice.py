@@ -63,6 +63,19 @@ def test_fault_tolerance_8dev():
     assert "ALL OK" in r.stdout
 
 
+def test_error_feedback_8dev():
+    """EF21 acceptance: qgenx(optda) + ef21-topk trains with guard on 8
+    devices — trace recorder == analytic wire to the byte, per-worker
+    error rows diverge, guard rejection freezes the memory bit-exactly,
+    checkpoint round-trip preserves it, placeholder states fail loudly,
+    and the no-EF qgenx path stays bitwise equal to the legacy
+    ``compressed_pmean_tree`` across bits{4,8} x mode{gather,two_phase}."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_error_feedback.py")],
+             timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
 def test_serve_wire_accounting_8dev():
     """Serving-path wire accounting: the engine's per-step logit-exchange
     bytes == the trace-time recorder on 8 devices (compressed path), the
