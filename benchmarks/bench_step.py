@@ -6,9 +6,11 @@ perf trajectory to hold a PR against.  This module times REAL jitted train
 steps on the 8-simulated-host-device mesh (the same topology the
 multidevice CI job and the README quickstart use), with warm-up (and
 compile) excluded and every timed step fenced by ``block_until_ready``,
-and commits the measured plan-vs-legacy rows to ``BENCH_step.json`` at the
-repo root — the baseline this and every future perf PR is checked against
-(CI job ``perf-smoke``).
+and commits the measured plan-vs-legacy AND bucketed-overlap rows
+(num_buckets {4,8} x overlap {bucketed,defer_tail} vs the monolithic
+num_buckets=1 baseline) to ``BENCH_step.json`` at the repo root — the
+baseline this and every future perf PR is checked against (CI job
+``perf-smoke``).
 
 Numbers are CPU-container numbers: they bound dispatch+compute on 8 forced
 host devices, not TPU throughput — but plan-vs-legacy on identical configs
@@ -47,6 +49,14 @@ CONFIGS = (
      dict(optimizer="extra_adam", bits=8, mode="two_phase")),
     ("qgenx_optda_int4_gather",
      dict(optimizer="qgenx", method="optda", bits=4, mode="gather")),
+)
+# Bucketed overlapped-exchange variants (PR 9), timed against the same
+# "plan" monolithic baseline (num_buckets=1, overlap="off").  Names are
+# part of the BENCH_step.json schema the perf-smoke CI job checks.
+BUCKET_VARIANTS = (
+    ("nb4_bucketed", dict(num_buckets=4, overlap="bucketed")),
+    ("nb8_bucketed", dict(num_buckets=8, overlap="bucketed")),
+    ("nb4_defer_tail", dict(num_buckets=4, overlap="defer_tail")),
 )
 DEFAULT_DEVICES = 8
 DEFAULT_WARMUP = 2
@@ -127,13 +137,20 @@ def run_inner(args) -> None:
         quant = QuantConfig(num_levels=15 if bits == 8 else 5, bits=bits,
                             bucket_size=512)
         timings = {}
-        for variant, use_plan in (("plan", True), ("legacy", False)):
+        variants = [("plan", dict(use_plan=True)),
+                    ("legacy", dict(use_plan=False))]
+        variants += [(v, dict(use_plan=True, **kw))
+                     for v, kw in BUCKET_VARIANTS]
+        for variant, exkw in variants:
             ex_cfg = ExchangeConfig(
                 compressor="qgenx", quant=quant, mode=knobs["mode"],
-                axis_name="data", use_plan=use_plan)
+                axis_name="data", **exkw)
             params = model.init(jax.random.PRNGKey(0))
             opt_state = opt.init_state(opt_cfg, params)
-            ex_state = make_exchange(ex_cfg).init_state()
+            # template/num_workers sizes the defer_tail pending buffer;
+            # for the other variants it leaves the [1] placeholders
+            ex_state = make_exchange(ex_cfg).init_state(
+                template=params, num_workers=n_dev)
             step_fn = make_train_step(model, opt_cfg, exchange=ex_cfg,
                                       mesh=mesh)
             with mesh:
@@ -148,6 +165,11 @@ def run_inner(args) -> None:
         rows.append({
             "name": f"ratio_{name}",
             "plan_over_legacy": round(timings["plan"] / timings["legacy"], 4),
+        })
+        best = min(timings[v] for v, _ in BUCKET_VARIANTS)
+        rows.append({
+            "name": f"ratio_overlap_{name}",
+            "overlap_best_over_mono": round(best / timings["plan"], 4),
         })
 
     doc = {
@@ -204,7 +226,7 @@ def check_doc(doc: dict, configs=None, tol: float = RATIO_TOL) -> list:
         problems.append("section != 'step'")
     names = {r.get("name"): r for r in doc.get("rows", [])}
     for cname in configs or [c for c, _ in CONFIGS]:
-        for variant in ("plan", "legacy"):
+        for variant in ("plan", "legacy") + tuple(v for v, _ in BUCKET_VARIANTS):
             row = names.get(f"step_{cname}_{variant}")
             if row is None or "ms_median" not in row:
                 problems.append(f"missing measured row step_{cname}_{variant}")
@@ -215,6 +237,15 @@ def check_doc(doc: dict, configs=None, tol: float = RATIO_TOL) -> list:
             problems.append(
                 f"plan slower than legacy beyond tolerance for {cname}: "
                 f"{ratio['plan_over_legacy']} > {tol}")
+        # the overlapped exchange must not cost wall-clock vs monolithic:
+        # the best bucketed/overlap variant is held to the same ratio gate
+        oratio = names.get(f"ratio_overlap_{cname}")
+        if oratio is None or "overlap_best_over_mono" not in oratio:
+            problems.append(f"missing overlap ratio row for {cname}")
+        elif oratio["overlap_best_over_mono"] > tol:
+            problems.append(
+                f"overlapped slower than monolithic beyond tolerance for "
+                f"{cname}: {oratio['overlap_best_over_mono']} > {tol}")
     return problems
 
 
@@ -233,8 +264,11 @@ def _finish(doc, args, out_path) -> None:
         if "ms_median" in r:
             emit(r["name"], r["ms_median"] * 1e3,
                  f"ms_median={r['ms_median']};ms_mean={r['ms_mean']}")
-        else:
+        elif "plan_over_legacy" in r:
             emit(r["name"], 0.0, f"plan_over_legacy={r['plan_over_legacy']}")
+        else:
+            emit(r["name"], 0.0,
+                 f"overlap_best_over_mono={r['overlap_best_over_mono']}")
     problems = check_doc(doc, configs=args.configs or None, tol=args.tol)
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)

@@ -7,8 +7,8 @@ Subpackage layout:
   extragradient.py  — Q-GenX update rule + DA/DE/OptDA variants
   vi.py             — monotone VI test problems + noise oracles
   exchange.py       — unified Exchange API: pluggable compressors, explicit
-                      ExchangeState, fused-kernel routing, wire accounting
-  compressed_collectives.py — DEPRECATED thin wrappers over exchange.py
+                      ExchangeState, fused-kernel routing, wire accounting,
+                      bucketed overlapped exchange
 """
 
 from repro.core.quantization import (  # noqa: F401

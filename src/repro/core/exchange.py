@@ -60,12 +60,15 @@ captures what was actually passed, and ``Exchange.wire_bytes`` /
 train step can emit a ``wire_bytes`` metric that tests assert equal to the
 recorder.
 
-``repro.core.compressed_collectives`` remains as thin deprecated wrappers
-over this module so pre-existing call sites stay bit-exact.
+This module IS the seam: the pre-refactor ``compressed_collectives``
+wrappers were retired once every call site migrated here (the underlying
+``_qgenx_pmean`` / ``_qgenx_pmean_leafwise`` implementations are
+unchanged and stay bit-exact with the pre-Exchange behavior).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
@@ -134,9 +137,32 @@ def wire_trace_stop() -> list:
     return rec or []
 
 
+_WIRE_PREFIX: str = ""
+
+
+@contextlib.contextmanager
+def wire_scope(prefix: str):
+    """Trace-time attribution scope: every operand recorded inside gets
+    ``prefix`` prepended to its name (the bucketed exchange wraps each
+    bucket's chain in ``wire_scope(f"b{i}/")``, so the recorder output
+    can be grouped per bucket — ``b0/gather_payload``, ... — and the
+    per-bucket sums asserted against the analytic accounting).  Purely a
+    recorder concern: no traced value changes, and outside an active
+    trace this is free.  Nests by concatenation."""
+    global _WIRE_PREFIX
+    old = _WIRE_PREFIX
+    _WIRE_PREFIX = old + prefix
+    try:
+        yield
+    finally:
+        _WIRE_PREFIX = old
+
+
 def _record_wire(name: str, arr) -> None:
     if _WIRE_TRACE is not None:
-        _WIRE_TRACE.append((name, int(arr.size) * arr.dtype.itemsize))
+        _WIRE_TRACE.append(
+            (_WIRE_PREFIX + name, int(arr.size) * arr.dtype.itemsize)
+        )
 
 
 def record_wire(name: str, arr) -> None:
@@ -698,6 +724,37 @@ class ExchangeConfig:
         recomputed, for the adam family the params themselves), gated
         behind ``lax.cond`` exactly like the sync gate.  Wire bytes are
         counted by the same recorder/metric as every other exchange.
+      num_buckets: bucketed-pipeline fan-out of tree exchanges.  1
+        (default) = the monolithic PR 5 path, byte-identical jaxpr.
+        B>1 = the leaf list is split into B contiguous layer-ordered
+        runs (:func:`repro.core.exchange_plan.partition_leaf_ids`), each
+        planned and exchanged as an INDEPENDENT quantize+collective op
+        chain that depends only on its own gradient leaves — which is
+        what lets XLA's latency-hiding scheduler overlap each bucket's
+        collective with the cotangent compute of earlier layers instead
+        of serializing one monolithic gather after the full gradient.
+        Per-segment quantizer policies, tile padding and key tags are
+        decided per bucket by the same ``plan_groups`` policy (segments
+        stay whole); noise keys are folded per bucket, so B>1 draws
+        different (still unbiased) noise than B=1.  Requires
+        ``use_plan`` and a flat-buffer mode (not leafwise); the
+        contractive (error-feedback) compressors reject B>1 loudly —
+        their [K, n] memory indexes the WHOLE-plan buffer atomically.
+      overlap: "off" | "bucketed" | "defer_tail".  "off" (default) keeps
+        the monolithic exchange even when ``num_buckets`` > 1 would be
+        legal elsewhere (the two knobs are gated together: bucketing is
+        only entered when overlap != "off").  "bucketed" = issue the
+        per-bucket chains within the step (in backprop order, last
+        leaves first).  "defer_tail" = additionally double-buffer the
+        TAIL bucket (bucket 0 — the first layers, whose cotangents
+        backprop produces LAST): its collective result is NOT consumed
+        this step but carried in ``ExchangeState.pending`` and applied
+        at the top of the NEXT sync, so step N's tail collective
+        overlaps step N+1's forward.  The applied tail mean is one sync
+        STALE (zeros on the very first sync) — a documented semantics
+        change, not a silent one; partial-participation masks are
+        rejected with defer_tail (a stale mean under a changed alive-set
+        renorm is undefined).
     """
 
     compressor: str = "qgenx"
@@ -721,10 +778,46 @@ class ExchangeConfig:
     recenter_every: int = 0
     allreduce_fallback: bool = False
     use_plan: bool = True
+    num_buckets: int = 1
+    overlap: str = "off"
 
     def __post_init__(self):
         if self.mode not in ("gather", "two_phase", "leafwise"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.overlap not in ("off", "bucketed", "defer_tail"):
+            raise ValueError(f"unknown overlap {self.overlap!r}")
+        if self.num_buckets < 1:
+            raise ValueError(
+                f"num_buckets must be >= 1, got {self.num_buckets}"
+            )
+        if self.overlap != "off":
+            if self.num_buckets < 2:
+                raise ValueError(
+                    f"overlap={self.overlap!r} needs num_buckets >= 2 "
+                    "(one bucket has nothing to overlap); use "
+                    "overlap='off' for the monolithic exchange"
+                )
+            if not self.use_plan:
+                raise ValueError(
+                    "bucketed overlap requires use_plan=True: the bucket "
+                    "sub-plans ARE ExchangePlans (contiguous runs of "
+                    "whole segments) — there is no per-call-layout "
+                    "bucketing"
+                )
+            if self.mode == "leafwise":
+                raise ValueError(
+                    "mode='leafwise' has no flat buffer to bucket (each "
+                    "leaf is already an independent collective chain; "
+                    "XLA overlaps them natively) — bucketing applies to "
+                    "the gather/two_phase flat-buffer modes"
+                )
+        elif self.num_buckets > 1:
+            raise ValueError(
+                f"num_buckets={self.num_buckets} with overlap='off' is "
+                "ambiguous — the monolithic path ignores buckets; set "
+                "overlap='bucketed' (or 'defer_tail') to enter the "
+                "bucketed pipeline, or num_buckets=1 to be explicit"
+            )
         if self.level_schedule not in ("fixed", "qada"):
             raise ValueError(f"unknown level_schedule {self.level_schedule!r}")
         if self.level_schedule == "qada" and self.level_update_every <= 0:
@@ -783,6 +876,14 @@ class ExchangeState:
       is what makes checkpoint round-trips and guard rollbacks exact);
       a [1] placeholder for every unbiased compressor.  Sized by
       ``Exchange.init_state(template, num_workers)``.
+    pending: the double-buffered TAIL-bucket slot of
+      ``overlap='defer_tail'`` — the padded flat mean buffer of bucket
+      0's most recent collective, carried one sync and applied at the
+      top of the next (replicated across the exchange axis: every
+      device runs the same collective, so checkpoint round-trips, guard
+      rollbacks and the donated carry stay exact — the same argument as
+      ``error``); a [1] placeholder everywhere else.  Sized by
+      ``Exchange.init_state(template, num_workers)``.
     """
 
     levels: Array
@@ -790,10 +891,12 @@ class ExchangeState:
     hist: Array
     step: Array
     error: Array
+    pending: Array
 
     def tree_flatten(self):
         return (
-            self.levels, self.levels_lo, self.hist, self.step, self.error
+            self.levels, self.levels_lo, self.hist, self.step, self.error,
+            self.pending,
         ), None
 
     @classmethod
@@ -806,6 +909,11 @@ def _null_error() -> Array:
     return jnp.zeros((1,), jnp.float32)
 
 
+def _null_pending() -> Array:
+    """The [1] pending-tail placeholder of every non-defer_tail config."""
+    return jnp.zeros((1,), jnp.float32)
+
+
 def null_exchange_state() -> ExchangeState:
     """Placeholder state for steps built without an exchange (uniform
     signature: callers always thread an ExchangeState)."""
@@ -813,7 +921,7 @@ def null_exchange_state() -> ExchangeState:
     return ExchangeState(
         levels=lv, levels_lo=jnp.copy(lv),  # donation-safe: no aliasing
         hist=jnp.zeros((1,), jnp.float32), step=jnp.zeros((), jnp.int32),
-        error=_null_error(),
+        error=_null_error(), pending=_null_pending(),
     )
 
 
@@ -901,6 +1009,15 @@ class Compressor:
                 "no sharding-preserving leafwise path; use mode='gather' "
                 "or 'two_phase'"
             )
+        if cfg.overlap != "off" and self.has_error:
+            raise ValueError(
+                f"compressor {self.name!r} (contractive contract) cannot "
+                "run the bucketed overlapped exchange: its [num_workers, "
+                "n] error memory scatter-adds row offsets into the "
+                "WHOLE-plan flat buffer atomically, and bucketing would "
+                "split that update across independently-keyed chains — "
+                "use overlap='off' (the EF path stays monolithic)"
+            )
 
     def contraction_alpha(self, n: int, cfg: ExchangeConfig) -> float:
         """The α of the contractive tier; only meaningful there."""
@@ -948,6 +1065,66 @@ class Compressor:
         """Exchange the packed buffer (default: one flat stream; per-
         segment-policy compressors override with a per-segment loop)."""
         return self.pmean(flat, cfg, state, key, axis_index)
+
+    # -- bucketed overlapped exchange -----------------------------------
+
+    def bucket_partition(self, leaves, cfg: ExchangeConfig) -> tuple:
+        """The contiguous layer-ordered bucket split of this leaf list
+        (tuple of leaf-id tuples) — shared by the exchange, the analytic
+        accounting and ``init_state``'s pending-slot sizing, so all
+        three see the same static partition."""
+        sizes = tuple(_size_of(l) for l in leaves)
+        return xplan.partition_leaf_ids(sizes, cfg.num_buckets)
+
+    def pmean_tree_bucketed(self, tree, cfg: ExchangeConfig,
+                            state: ExchangeState, key, axis_index=None):
+        """Bucketed-pipeline tree exchange: one independent
+        quantize+collective chain per contiguous leaf bucket, each
+        planned through the compressor's own ``plan_groups`` (segments
+        whole, per-segment policies/padding/key tags untouched within
+        the bucket).  Chains are issued in BACKPROP order (highest leaf
+        ids first — the cotangents backprop produces first), and each
+        depends only on its own bucket's leaves, which is the data-flow
+        property that lets XLA's latency-hiding scheduler hoist bucket
+        k's collective over bucket j<k's remaining cotangent compute.
+
+        With ``overlap='defer_tail'`` the tail bucket (bucket 0) is
+        double-buffered: its collective result goes into the returned
+        ``new_pending`` and the value APPLIED for its leaves is
+        ``state.pending`` — the previous sync's tail mean (zeros on the
+        very first sync).  Returns ``(mean_tree, new_pending)``.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        buckets = self.bucket_partition(leaves, cfg)
+        axis_size = jax.lax.psum(1, cfg.axis_name)
+        out = [None] * len(leaves)
+        new_pending = state.pending
+        defer = cfg.overlap == "defer_tail"
+        for bi in range(len(buckets) - 1, -1, -1):
+            ids = buckets[bi]
+            sub = [leaves[i] for i in ids]
+            plan = self.plan_for(sub, cfg, axis_size, "pmean")
+            # per-bucket key fold: chains draw independent noise (still
+            # Definition-1 unbiased; num_buckets=1 never reaches here,
+            # so the monolithic jaxpr keeps its exact keys)
+            bkey = jax.random.fold_in(key, bi)
+            with jax.named_scope(f"exchange/bucket{bi}"):
+                with jax.named_scope("pack"):
+                    flat = plan.pack(sub)
+                with wire_scope(f"b{bi}/"), \
+                        jax.named_scope("quantize_collective"):
+                    mean_flat = self._pmean_planned(
+                        flat, plan, cfg, state, bkey, axis_index
+                    )
+                if defer and bi == 0:
+                    _check_pending(self.name, state.pending, plan.total)
+                    new_pending = mean_flat
+                    mean_flat = state.pending
+                with jax.named_scope("unpack"):
+                    parts = plan.unpack(mean_flat, sub)
+            for i, p in zip(ids, parts):
+                out[i] = p
+        return jax.tree_util.tree_unflatten(treedef, out), new_pending
 
     def pmean(self, x, cfg: ExchangeConfig, state: ExchangeState, key,
               axis_index=None):
@@ -1031,6 +1208,20 @@ class Compressor:
 
 # single shape-product definition shared with the plan's offset math
 _size_of = xplan.size_of
+
+
+def _check_pending(name: str, pending, total: int) -> None:
+    """Trace-time shape check of the defer_tail slot (mirrors the EF
+    ``_check_error`` contract: a placeholder reaching a real exchange is
+    a pointed error, not garbage math)."""
+    if pending.ndim != 1 or pending.shape[0] != total:
+        raise ValueError(
+            f"compressor {name!r} with overlap='defer_tail' needs a "
+            f"pending-tail buffer of shape [{total}] (the tail bucket's "
+            f"padded plan length), found {tuple(pending.shape)} — "
+            "initialize the state with ex.init_state(template=params, "
+            "num_workers=axis_size)"
+        )
 
 
 def _split_like(flat: Array, leaves):
@@ -1665,7 +1856,26 @@ class Exchange:
             hist=jnp.zeros((bins,), jnp.float32),
             step=jnp.zeros((), jnp.int32),
             error=self.compressor.init_error(self.cfg, template, num_workers),
+            pending=self._init_pending(template, num_workers),
         )
+
+    def _init_pending(self, template, num_workers) -> Array:
+        """Zeroed defer_tail slot, sized to the TAIL bucket's padded plan
+        length (the buffer ``pmean_tree_bucketed`` carries across syncs);
+        the [1] placeholder for every other overlap mode — and, like the
+        EF memory, when no template is given (the pmean path then raises
+        a pointed error instead of computing garbage)."""
+        if self.cfg.overlap != "defer_tail":
+            return _null_pending()
+        if template is None or num_workers is None:
+            return _null_pending()
+        leaves = jax.tree_util.tree_leaves(template)
+        buckets = self.compressor.bucket_partition(leaves, self.cfg)
+        tail = [leaves[i] for i in buckets[0]]
+        plan = self.compressor.plan_for(
+            tail, self.cfg, int(num_workers), "pmean"
+        )
+        return jnp.zeros((plan.total,), jnp.float32)
 
     def _qada_active(self) -> bool:
         return (
@@ -1739,6 +1949,7 @@ class Exchange:
         return ExchangeState(
             levels=levels, levels_lo=levels_lo,
             hist=hist, step=state.step + 1, error=state.error,
+            pending=state.pending,
         )
 
     # -- exchanges -----------------------------------------------------
@@ -1795,6 +2006,23 @@ class Exchange:
             return mean, dataclasses.replace(
                 self._advance(state, None), error=err
             )
+        if self.cfg.overlap != "off":
+            if mask is not None and self.cfg.overlap == "defer_tail":
+                raise ValueError(
+                    "overlap='defer_tail' does not support partial-"
+                    "participation masks: the applied tail mean is one "
+                    "sync stale, and renormalizing it over THIS step's "
+                    "alive set would rescale a buffer aggregated under a "
+                    "different one — use overlap='bucketed' with masks"
+                )
+            if mask is not None:
+                tree = _mask_tree(tree, mask)
+            mean, new_pending = self.compressor.pmean_tree_bucketed(
+                tree, self.cfg, state, key, axis_index
+            )
+            hist = self._tree_hist(tree) if self._qada_active() else None
+            mean, new_state = self._finish(mean, state, hist, mask)
+            return mean, dataclasses.replace(new_state, pending=new_pending)
         if mask is not None:
             tree = _mask_tree(tree, mask)
         mean = self.compressor.pmean_tree(tree, self.cfg, state, key, axis_index)
@@ -1938,10 +2166,33 @@ class Exchange:
 
     def wire_bytes_tree(self, tree, axis_size: int) -> float:
         """Same, for one pmean_tree of this pytree (leaf shapes may matter:
-        leafwise mode and the layerwise policy account per leaf/group)."""
+        leafwise mode and the layerwise policy account per leaf/group).
+        Under the bucketed pipeline the bill is the sum of the per-bucket
+        exchanges (each bucket pays its own padding tails — honest about
+        the fragmentation cost; see :meth:`bucket_wire_bytes_tree`)."""
+        if self.cfg.overlap != "off":
+            return (float(sum(self.bucket_wire_bytes_tree(tree, axis_size)))
+                    + self._qada_wire_bytes())
         shapes = [l for l in jax.tree_util.tree_leaves(tree)]
         return (self.compressor.wire_bytes_tree(shapes, axis_size, self.cfg)
                 + self._qada_wire_bytes())
+
+    def bucket_wire_bytes_tree(self, tree, axis_size: int) -> list:
+        """Per-bucket analytic collective-operand bytes for one bucketed
+        ``pmean_tree`` — entry i is exactly what the trace recorder's
+        ``b{i}/``-prefixed operands sum to (each bucket is accounted as
+        its own monolithic exchange over its sub-leaves: same
+        ``plan_groups`` policy, same per-bucket quota padding the
+        sub-plan applies)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        buckets = self.compressor.bucket_partition(leaves, self.cfg)
+        mono = dataclasses.replace(self.cfg, num_buckets=1, overlap="off")
+        return [
+            float(self.compressor.wire_bytes_tree(
+                [leaves[i] for i in ids], axis_size, mono
+            ))
+            for ids in buckets
+        ]
 
     def compress_wire_bytes(self, n: int) -> float:
         """Bytes one worker broadcasts for one compressed n-vector."""

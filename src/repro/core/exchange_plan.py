@@ -236,6 +236,62 @@ def _align(n: int, quant: Optional[QuantConfig], mode: str,
 
 
 @functools.lru_cache(maxsize=None)
+def partition_leaf_ids(sizes: tuple, num_buckets: int) -> tuple:
+    """Split leaf ids ``0..len(sizes)-1`` into ``num_buckets`` contiguous
+    layer-ordered runs, greedily balanced by coordinate count.
+
+    Contiguity in tree-flatten order is the load-bearing property: the
+    bucketed exchange issues one quantize+collective chain per bucket as
+    backprop produces that bucket's leaves, so a bucket must be a run of
+    *adjacent* layers — never an interleaving (which would serialize the
+    whole backward behind every bucket).  Each bucket is later planned
+    independently through the compressor's own ``plan_groups``, so
+    per-segment quantizer policies, tile padding, and key tags are
+    decided exactly as in the monolithic plan, just over a sub-range.
+
+    Effective bucket count is ``min(num_buckets, len(sizes))`` (every
+    bucket non-empty).  Deterministic and cached: the same sizes always
+    map to the same partition, which is what keeps bucketed wire
+    accounting and the per-bucket recorder in static agreement.
+
+    Returns a tuple of leaf-id tuples, ascending and contiguous.
+    """
+    n_leaves = len(sizes)
+    k = max(1, min(int(num_buckets), n_leaves))
+    if k == 1:
+        return (tuple(range(n_leaves)),)
+    total = sum(sizes)
+    target = total / k
+    out, cur, acc, remaining = [], [], 0, k
+    for i, s in enumerate(sizes):
+        cur.append(i)
+        acc += s
+        # close the bucket once it reaches the running average target,
+        # but never leave fewer leaves than buckets still to fill
+        left = n_leaves - i - 1
+        if len(out) < k - 1 and acc >= target and left >= remaining - 1:
+            out.append(tuple(cur))
+            cur, acc = [], 0
+            remaining -= 1
+            total_left = total - sum(
+                sizes[j] for b in out for j in b)
+            target = total_left / max(remaining, 1)
+    if cur:
+        out.append(tuple(cur))
+    # guarantee exactly k buckets: split trailing leaves off if the greedy
+    # pass under-produced (can happen when one huge leaf dominates)
+    while len(out) < k:
+        for bi in range(len(out) - 1, -1, -1):
+            if len(out[bi]) > 1:
+                head, tail = out[bi][:-1], (out[bi][-1],)
+                out = out[:bi] + [head, tail] + out[bi + 1:]
+                break
+        else:  # pragma: no cover — k <= n_leaves makes this unreachable
+            break
+    return tuple(tuple(b) for b in out)
+
+
+@functools.lru_cache(maxsize=None)
 def build_plan(leaves_key: tuple, groups: tuple, mode: str,
                axis_size: int, purpose: str) -> ExchangePlan:
     """Build (and cache) the plan for one static layout.

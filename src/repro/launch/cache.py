@@ -1,0 +1,95 @@
+"""Persistent compilation cache + profiler wiring for the launchers.
+
+Two small, launcher-shared concerns live here so train / dryrun / serve
+stay flag-thin:
+
+* :func:`enable_compilation_cache` — point jax's persistent compilation
+  cache (``jax.experimental.compilation_cache``) at an on-disk directory
+  so a fresh process re-loads compiled executables instead of repaying
+  the cold compile (the full tinyllama train step compiles for ~293 s in
+  this container; a warm cache turns that into a disk read).  This is
+  the prep work for the multi-host ROADMAP item, where EVERY process of
+  the fleet pays the cold compile without it.
+
+* :func:`profile_trace` — a context manager around
+  ``jax.profiler.start_trace`` / ``stop_trace`` emitting a TensorBoard-
+  loadable trace.  The exchange annotates its bucketed pipeline with
+  ``jax.named_scope`` (``exchange/bucket{i}/{pack,quantize_collective,
+  unpack}``) and the staged backward with ``staged_forward`` /
+  ``staged_backward``, so communication/compute overlap is visible per
+  bucket in the trace viewer (workflow documented in DESIGN.md §10).
+
+Both are failure-tolerant by design: a launcher must never die because a
+cache directory is read-only or a profiler backend is missing — the
+feature degrades to a warning and the run proceeds uncached/unprofiled.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Enable jax's persistent on-disk compilation cache at ``cache_dir``.
+
+    Returns True when the cache was wired up, False when ``cache_dir`` is
+    empty (feature off) or enabling failed (warning printed, run
+    continues uncached).  Must be called BEFORE the first jit compile to
+    be of any use; the launchers call it right after arg parsing.
+
+    The min-compile-time / min-entry-size thresholds are dropped to zero
+    so even the reduced smoke-size steps are cached — the point in CI and
+    tests is determinism of the warm path, not saving only the 293 s
+    whales.
+    """
+    if not cache_dir:
+        return False
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        import jax
+        from jax.experimental.compilation_cache import compilation_cache
+
+        compilation_cache.set_cache_dir(cache_dir)
+        # cache everything, however small/fast the compile was
+        for flag, val in (
+            ("jax_persistent_cache_min_compile_time_secs", 0.0),
+            ("jax_persistent_cache_min_entry_size_bytes", 0),
+        ):
+            try:
+                jax.config.update(flag, val)
+            except AttributeError:
+                pass  # older jax: threshold flag absent, cache still on
+        return True
+    except (OSError, ImportError) as e:
+        print(f"[cache] WARNING: compilation cache disabled ({e})",
+              file=sys.stderr, flush=True)
+        return False
+
+
+@contextlib.contextmanager
+def profile_trace(profile_dir: str):
+    """Emit a ``jax.profiler`` trace of the enclosed block to
+    ``profile_dir`` (TensorBoard / Perfetto loadable).  Yields True when
+    tracing is active, False when ``profile_dir`` is empty or the
+    profiler could not start (warning printed, block runs unprofiled).
+    """
+    if not profile_dir:
+        yield False
+        return
+    import jax
+
+    try:
+        os.makedirs(profile_dir, exist_ok=True)
+        jax.profiler.start_trace(profile_dir)
+    except (OSError, RuntimeError) as e:
+        print(f"[profile] WARNING: trace disabled ({e})",
+              file=sys.stderr, flush=True)
+        yield False
+        return
+    try:
+        yield True
+    finally:
+        jax.profiler.stop_trace()
+        print(f"[profile] trace written to {profile_dir}", flush=True)

@@ -138,6 +138,8 @@ def lower_combo(
     tag: str = "",
     optimizer: str = "extra_adam",
     method: str = "de",
+    num_buckets: int = 1,
+    overlap: str = "off",
 ):
     _hlo_tag = tag
     """Lower+compile one (arch, shape) on the given mesh. Returns report."""
@@ -224,10 +226,17 @@ def lower_combo(
             # shard_map via the "none" compressor; allreduce_fallback:
             # this jaxlib's SPMD partitioner lowers only all-reduce under
             # the partially-manual mesh (see ExchangeConfig docstring)
+            # num_buckets/overlap thread through so the CLI surface is
+            # uniform with train — but the pod exchange is LEAFWISE
+            # (this jaxlib's partial-manual partitioner lowers only
+            # all-reduce), and leafwise has no flat buffer to bucket:
+            # ExchangeConfig validation rejects the combination loudly
+            # rather than lowering a program the partitioner would abort
             ex_cfg = ExchangeConfig(
                 compressor="qgenx" if quant is not None else "none",
                 quant=quant, mode="leafwise", axis_name="pod",
                 allreduce_fallback=True,
+                num_buckets=num_buckets, overlap=overlap,
             )
         step = make_train_step(model, opt_cfg, exchange=ex_cfg, mesh=mesh)
         ex = make_exchange(ex_cfg) if ex_cfg is not None else None
@@ -353,7 +362,8 @@ def lower_combo(
 
 
 def run_and_save(arch, shape_name, mesh_kind, mode, out_dir, overrides=None,
-                 tag="", quant_bits=8, optimizer="extra_adam", method="de"):
+                 tag="", quant_bits=8, optimizer="extra_adam", method="de",
+                 num_buckets=1, overlap="off"):
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     name = f"{arch}__{shape_name}__{mesh_kind}__{mode}"
     if optimizer != "extra_adam":
@@ -365,7 +375,8 @@ def run_and_save(arch, shape_name, mesh_kind, mode, out_dir, overrides=None,
     try:
         rep = lower_combo(arch, shape_name, mesh, mode=mode, overrides=overrides,
                           quant_bits=quant_bits, tag=tag, optimizer=optimizer,
-                          method=method)
+                          method=method, num_buckets=num_buckets,
+                          overlap=overlap)
         rep["tag"] = tag
         rep["overrides"] = list(overrides or [])
     except Exception as e:  # record failures as bugs to fix
@@ -412,7 +423,23 @@ def main():
     ap.add_argument("--method", default="de", choices=("de", "optda"),
                     help="qgenx oracle schedule (optda carries the "
                          "params-shaped prev_half slot in the opt state)")
+    ap.add_argument("--num-buckets", type=int, default=1,
+                    help="bucketed overlapped exchange fan-out (uniform "
+                         "with the train CLI; the multi-pod qgenx exchange "
+                         "is leafwise, where bucketing is rejected loudly)")
+    ap.add_argument("--overlap", default="off",
+                    choices=("off", "bucketed", "defer_tail"))
+    ap.add_argument("--compilation-cache-dir", default="",
+                    help="persistent on-disk XLA compilation cache — the "
+                         "512-device combo compiles are exactly the cold "
+                         "starts this amortizes across dryrun invocations")
     args = ap.parse_args()
+
+    from repro.launch.cache import enable_compilation_cache
+
+    if enable_compilation_cache(args.compilation_cache_dir):
+        print(f"[dryrun] compilation cache: {args.compilation_cache_dir}",
+              flush=True)
 
     archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
     shapes = (
@@ -426,7 +453,9 @@ def main():
             rep = run_and_save(arch, shape, args.mesh, args.mode, args.out,
                                overrides=args.override, tag=args.tag,
                                quant_bits=args.qgenx_bits,
-                               optimizer=args.optimizer, method=args.method)
+                               optimizer=args.optimizer, method=args.method,
+                               num_buckets=args.num_buckets,
+                               overlap=args.overlap)
             n_fail += rep["status"] == "error"
     raise SystemExit(1 if n_fail else 0)
 

@@ -237,7 +237,16 @@ def main(argv=None):
                     help="checkpoint dir: serve trained params "
                          "(restore_with_fallback)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compilation-cache-dir", default="",
+                    help="persistent on-disk XLA compilation cache; warm "
+                         "serving restarts skip the prefill/decode compiles")
     args = ap.parse_args(argv)
+
+    from repro.launch.cache import enable_compilation_cache
+
+    if enable_compilation_cache(args.compilation_cache_dir):
+        print(f"[serve] compilation cache: {args.compilation_cache_dir}",
+              flush=True)
 
     cfg = get_config(args.arch)
     if args.reduced:

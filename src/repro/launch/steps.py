@@ -188,7 +188,27 @@ def make_train_step(
         )
 
     loss_fn = make_loss_fn(model)
-    grad_fn = jax.value_and_grad(loss_fn)
+    if ex is not None and ex.cfg.overlap != "off":
+        # Bucketed overlapped exchange: stage the backward explicitly
+        # through jax.vjp (numerically identical to value_and_grad — the
+        # same cotangent pullback seeded with 1.0) and fence forward /
+        # backward in named_scopes so traces show the overlap.  The
+        # overlap itself is a DATA-FLOW property, not a Python-order one:
+        # each bucket's quantize+collective chain (issued inside
+        # ex.pmean_tree, highest-leaf buckets first — the cotangents
+        # backprop produces first) depends only on its own gradient
+        # leaves, so XLA's latency-hiding scheduler is free to run bucket
+        # k's collective while the remaining cotangent compute of
+        # earlier layers is still in flight, instead of serializing one
+        # monolithic gather behind the full gradient.
+        def grad_fn(p, b):
+            with jax.named_scope("staged_forward"):
+                loss, pullback = jax.vjp(lambda q: loss_fn(q, b), p)
+            with jax.named_scope("staged_backward"):
+                (g,) = pullback(jnp.ones_like(loss))
+            return loss, g
+    else:
+        grad_fn = jax.value_and_grad(loss_fn)
     axis_name = ex.cfg.axis_name if ex is not None else None
     sync_every = ex.cfg.sync_every if ex is not None else 1
     recenter_every = ex.cfg.recenter_every if ex is not None else 0

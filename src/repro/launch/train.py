@@ -37,6 +37,7 @@ def _early_flags():
 
 _early_flags()
 
+import contextlib  # noqa: E402
 import dataclasses  # noqa: E402
 
 import jax  # noqa: E402
@@ -56,6 +57,10 @@ from repro.core.exchange import (  # noqa: E402
 )
 from repro.core.quantization import QuantConfig  # noqa: E402
 from repro.data.pipeline import add_modality_stubs, make_pipeline  # noqa: E402
+from repro.launch.cache import (  # noqa: E402
+    enable_compilation_cache,
+    profile_trace,
+)
 from repro.launch.steps import make_train_step  # noqa: E402
 from repro.models.model import build, param_pspecs  # noqa: E402
 from repro.optim import optimizers as opt  # noqa: E402
@@ -93,6 +98,8 @@ def build_exchange_config(args, n_dev: int):
         sync_every=args.sync_every,
         recenter_every=args.recenter_every,
         use_plan=not args.no_exchange_plan,
+        num_buckets=args.num_buckets,
+        overlap=args.overlap,
     )
 
 
@@ -126,6 +133,29 @@ def main(argv=None):
                     help="escape hatch: per-call exchange layout instead of "
                          "the static ExchangePlan flat buffer (bit-exact for "
                          "qgenx/layerwise pmean either way; DESIGN.md §1.5)")
+    ap.add_argument("--num-buckets", type=int, default=1,
+                    help="bucketed overlapped exchange: split the gradient "
+                         "into this many contiguous layer-ordered buckets, "
+                         "each an independent quantize+collective chain XLA "
+                         "can overlap with backprop compute (1 = monolithic "
+                         "PR 5 path, byte-identical; requires --overlap)")
+    ap.add_argument("--overlap", default="off",
+                    choices=("off", "bucketed", "defer_tail"),
+                    help="off = monolithic exchange; bucketed = per-bucket "
+                         "chains issued in backprop order within the step; "
+                         "defer_tail = additionally double-buffer the tail "
+                         "bucket (first layers) — its collective result is "
+                         "carried in ExchangeState.pending and applied one "
+                         "sync late, overlapping step N's tail exchange "
+                         "with step N+1's forward (DESIGN.md §10)")
+    ap.add_argument("--compilation-cache-dir", default="",
+                    help="persistent on-disk XLA compilation cache: a fresh "
+                         "process re-loads compiled steps instead of "
+                         "repaying the cold compile (multi-host prep)")
+    ap.add_argument("--profile-dir", default="",
+                    help="emit a jax.profiler trace of the train loop here "
+                         "(named_scope-annotated per exchange bucket; view "
+                         "in TensorBoard/Perfetto — DESIGN.md §10)")
     ap.add_argument("--level-schedule", default="fixed",
                     choices=("fixed", "qada"))
     ap.add_argument("--level-update-every", type=int, default=0,
@@ -171,6 +201,10 @@ def main(argv=None):
                     help="train on one repeated batch (fast-convergence tests)")
     args = ap.parse_args(argv)
 
+    if enable_compilation_cache(args.compilation_cache_dir):
+        print(f"[train] compilation cache: {args.compilation_cache_dir}",
+              flush=True)
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -198,7 +232,8 @@ def main(argv=None):
               f"use_pallas={ex_cfg.use_pallas} schedule={ex_cfg.level_schedule} "
               f"sync_every={ex_cfg.sync_every} "
               f"recenter_every={ex_cfg.recenter_every} "
-              f"plan={ex_cfg.use_plan}",
+              f"plan={ex_cfg.use_plan} "
+              f"num_buckets={ex_cfg.num_buckets} overlap={ex_cfg.overlap}",
               flush=True)
     if args.optimizer == "qgenx":
         print(f"[train] qgenx method={args.method}", flush=True)
@@ -277,6 +312,12 @@ def main(argv=None):
         mesh_ctx.__enter__()
     times = []
     fixed_batch = add_modality_stubs(next(pipe), cfg, seed=args.seed)
+    # --profile-dir: one jax.profiler trace spanning the whole loop (the
+    # named_scope bucket annotations land inside the step's HLO; closed
+    # right after the last step so the final flush happens before any
+    # checkpoint I/O)
+    profiler = contextlib.ExitStack()
+    profiler.enter_context(profile_trace(args.profile_dir))
     for step in range(start_step, args.steps):
         batch = fixed_batch if args.repeat_batch else add_modality_stubs(
             next(pipe), cfg, seed=args.seed)
@@ -347,6 +388,7 @@ def main(argv=None):
                 faults.inject_ckpt_fault(args.checkpoint_dir, step + 1, kind)
                 print(f"[train] fault: injected {kind} into checkpoint "
                       f"{step + 1}", flush=True)
+    profiler.close()
     if not times:  # restored checkpoint already at/past --steps: nothing
         # ran, so save NOTHING — a save here would rewind the checkpoint
         # 'latest' pointer below the restored step

@@ -23,19 +23,23 @@ import numpy as np  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 from jax.experimental.shard_map import shard_map  # noqa: E402
 
-from repro.core.compressed_collectives import (  # noqa: E402
-    compressed_pmean,
-    compressed_pmean_tree,
-)
-from repro.core.quantization import QuantConfig, uniform_levels  # noqa: E402
+from repro.core.exchange import ExchangeConfig, make_exchange  # noqa: E402
+from repro.core.quantization import QuantConfig  # noqa: E402
 
 assert jax.device_count() == 8, jax.device_count()
 
 mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
 N = 4096
 CFG = QuantConfig(num_levels=15, q_norm=math.inf, bucket_size=512)
-LEVELS = uniform_levels(15)
 TRIALS = 16
+
+
+def _ex(mode):
+    return make_exchange(ExchangeConfig(
+        compressor="qgenx", quant=CFG, axis_name="data", mode=mode,
+        use_pallas=False,
+    ))
+
 
 xs = jnp.asarray(np.random.RandomState(0).randn(8, N), jnp.float32)
 true_mean = np.asarray(xs).mean(0)
@@ -43,10 +47,10 @@ true_mean = np.asarray(xs).mean(0)
 
 @functools.partial(jax.jit, static_argnames=("mode",))
 def run(x, key, mode):
+    ex = _ex(mode)
+
     def f(xl, k):
-        out = compressed_pmean(
-            xl.reshape(-1), "data", LEVELS, k, CFG, mode=mode, use_pallas=False
-        )
+        out, _ = ex.pmean(xl.reshape(-1), ex.init_state(), k)
         return out.reshape(1, N)
 
     return shard_map(
@@ -78,9 +82,12 @@ tree = {
 true = {k: np.asarray(v).mean(0) for k, v in tree.items()}
 
 
+EX_TREE = _ex("two_phase")
+
+
 def ftree(t, k):
     local = {"w": t["w"][0], "b": t["b"][0]}
-    out = compressed_pmean_tree(local, "data", LEVELS, k, CFG, mode="two_phase")
+    out, _ = EX_TREE.pmean_tree(local, EX_TREE.init_state(), k)
     return {"w": out["w"][None], "b": out["b"][None]}
 
 
@@ -100,9 +107,12 @@ assert err_w < 0.3 and err_b < 0.3, (err_w, err_b)
 print(f"PASS tree two_phase errw={err_w:.4f} errb={err_b:.4f}", flush=True)
 
 
+EX_EXACT = make_exchange(ExchangeConfig(compressor="none", axis_name="data"))
+
+
 def fexact(t, k):
     local = {"w": t["w"][0], "b": t["b"][0]}
-    out = compressed_pmean_tree(local, "data", LEVELS, k, None)
+    out, _ = EX_EXACT.pmean_tree(local, EX_EXACT.init_state(), k)
     return {"w": out["w"][None], "b": out["b"][None]}
 
 

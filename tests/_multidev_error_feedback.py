@@ -39,9 +39,9 @@ from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
 from repro.checkpoint.checkpointing import restore, save  # noqa: E402
 from repro.configs.registry import get_config  # noqa: E402
-from repro.core.compressed_collectives import compressed_pmean_tree  # noqa: E402
 from repro.core.exchange import (  # noqa: E402
     ExchangeConfig,
+    _qgenx_pmean,
     make_exchange,
     wire_trace_start,
     wire_trace_stop,
@@ -154,7 +154,18 @@ for bits in (8, 4):
 
         def f(tl, kk, exq=exq, q=q, mode=mode, levels=levels):
             new, _ = exq.pmean_tree(tl, exq.init_state(), kk)
-            old = compressed_pmean_tree(tl, "data", levels, kk, q, mode=mode)
+            # pre-plan reference: naive concatenate + flat qgenx exchange
+            # (the retired compressed_pmean_tree wrapper, inlined)
+            leaves, treedef = jax.tree_util.tree_flatten(tl)
+            flat = jnp.concatenate(
+                [l.reshape(-1).astype(jnp.float32) for l in leaves]
+            )
+            mean = _qgenx_pmean(flat, "data", levels, kk, q, mode)
+            outs, off = [], 0
+            for l in leaves:
+                outs.append(mean[off: off + l.size].reshape(l.shape))
+                off += l.size
+            old = jax.tree_util.tree_unflatten(treedef, outs)
             return new, old
 
         with mesh:

@@ -1,7 +1,7 @@
 """Subprocess payload: wire-bytes accounting + int4 end-to-end exactness.
 
 Run with 8 forced host devices.  For every (bits, mode) combination this
-asserts two things about :func:`compressed_pmean`:
+asserts two things about the flat qgenx exchange (``Exchange.pmean``):
 
 1. **Honest wire bytes** — the byte-size of every buffer actually handed
    to a collective (recorded at trace time via ``wire_trace_start``)
@@ -32,7 +32,14 @@ import numpy as np  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 from jax.experimental.shard_map import shard_map  # noqa: E402
 
-import repro.core.compressed_collectives as cc  # noqa: E402
+from repro.core.exchange import (  # noqa: E402
+    ExchangeConfig,
+    exchange_buffer_bytes,
+    make_exchange,
+    wire_bytes_per_device,
+    wire_trace_start,
+    wire_trace_stop,
+)
 from repro.core.quantization import QuantConfig, uniform_levels, _pad_to_buckets  # noqa: E402
 from repro.kernels.ref import dequantize_blocks_ref, quantize_blocks_ref  # noqa: E402
 
@@ -47,12 +54,15 @@ xs = jnp.asarray(np.random.RandomState(0).randn(K, N), jnp.float32)
 
 
 def run_exchange(cfg, levels, mode, key):
+    ex = make_exchange(ExchangeConfig(
+        compressor="qgenx", quant=cfg, axis_name="data", mode=mode,
+        use_pallas=False,
+    ))
+
     @functools.partial(jax.jit, static_argnames=())
     def run(x, k):
         def f(xl, kk):
-            out = cc.compressed_pmean(
-                xl.reshape(-1), "data", levels, kk, cfg, mode=mode, use_pallas=False
-            )
+            out, _ = ex.pmean(xl.reshape(-1), ex.init_state(), kk)
             return out.reshape(1, N)
 
         return shard_map(
@@ -126,21 +136,21 @@ for bits, s in ((8, 15), (4, 5)):
     levels = uniform_levels(s)
     for mode in ("gather", "two_phase"):
         key = jax.random.PRNGKey(17 * bits + (mode == "gather"))
-        cc.wire_trace_start()
+        wire_trace_start()
         out = np.asarray(run_exchange(cfg, levels, mode, key))
-        rec = cc.wire_trace_stop()
+        rec = wire_trace_stop()
         assert np.allclose(out, out[0:1], atol=1e-6), f"{bits}/{mode} replicas differ"
 
         got = dict(rec)
         assert len(got) == len(rec), f"duplicate trace names: {rec}"
-        want = cc.exchange_buffer_bytes(N, K, cfg, mode)
+        want = exchange_buffer_bytes(N, K, cfg, mode)
         assert got == want, (bits, mode, got, want)
         # 4-bit: the payload crossing the wire is the PACKED buffer (~n/2)
         if bits == 4 and mode == "gather":
             nb = -(-N // BUCKET)
             assert got["gather_payload"] == nb * BUCKET // 2, got
         # analytic per-device transmit model must agree with the buffers too
-        wb = cc.wire_bytes_per_device(N, K, cfg, mode)
+        wb = wire_bytes_per_device(N, K, cfg, mode)
         if mode == "gather":
             assert wb == sum(want.values()), (wb, want)
         print(f"PASS accounting bits={bits} mode={mode} {got}", flush=True)

@@ -31,7 +31,6 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 import repro.core.exchange as exchange_mod
-from repro.core.compressed_collectives import compressed_pmean
 from repro.core.exchange import (
     ExchangeConfig,
     ExchangeState,
@@ -90,7 +89,8 @@ def _unbiased_compressors() -> tuple:
 @pytest.mark.parametrize("mode", ["gather", "two_phase"])
 @pytest.mark.parametrize("bits", [8, 4])
 def test_exchange_matches_legacy_compressed_pmean(bits, mode, use_pallas):
-    """Full grid: the qgenx compressor is bit-exact with compressed_pmean."""
+    """Full grid: the qgenx compressor is bit-exact with the pre-Exchange
+    flat path (the retired compressed_pmean wrapper == _qgenx_pmean)."""
     quant = QuantConfig(
         num_levels=5 if bits == 4 else 15, q_norm=math.inf,
         bucket_size=256, bits=bits,
@@ -118,8 +118,8 @@ def test_exchange_matches_legacy_compressed_pmean(bits, mode, use_pallas):
     @jax.jit
     def run_legacy(xl, key):
         f = functools.partial(
-            compressed_pmean, axis_name="data", levels=levels, cfg=quant,
-            mode=mode, use_pallas=use_pallas,
+            exchange_mod._qgenx_pmean, axis_name="data", levels=levels,
+            cfg=quant, mode=mode, use_pallas=use_pallas,
         )
         return shard_map(lambda a, k: f(a, key=k), mesh=mesh,
                          in_specs=(P(), P()), out_specs=P(),
@@ -132,7 +132,19 @@ def test_exchange_matches_legacy_compressed_pmean(bits, mode, use_pallas):
 
 
 def test_pmean_tree_matches_legacy_tree():
-    from repro.core.compressed_collectives import compressed_pmean_tree
+    def compressed_pmean_tree(tl, axis_name, levels, k, quant, mode):
+        # pre-plan reference: naive concatenate + flat exchange (the
+        # retired compressed_pmean_tree wrapper, inlined)
+        leaves, treedef = jax.tree_util.tree_flatten(tl)
+        flat = jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves]
+        )
+        mean = exchange_mod._qgenx_pmean(flat, axis_name, levels, k, quant, mode)
+        outs, off = [], 0
+        for l in leaves:
+            outs.append(mean[off: off + l.size].reshape(l.shape))
+            off += l.size
+        return jax.tree_util.tree_unflatten(treedef, outs)
 
     quant = QuantConfig(num_levels=15, bucket_size=256, q_norm=math.inf)
     mesh = _one_dev_mesh()
@@ -530,7 +542,7 @@ def test_qada_requires_update_period():
 def test_exchange_state_is_pytree():
     st = null_exchange_state()
     leaves = jax.tree_util.tree_leaves(st)
-    assert len(leaves) == 5  # levels, levels_lo, hist, step, error
+    assert len(leaves) == 6  # levels, levels_lo, hist, step, error, pending
     st2 = jax.tree_util.tree_map(lambda x: x, st)
     assert isinstance(st2, ExchangeState)
 

@@ -313,30 +313,34 @@ def test_structure_mismatch_does_not_walk_back(tmp_path):
 
 
 def test_legacy_checkpoint_without_error_slot_resets_named_aux(tmp_path):
-    """Checkpoints written before the EF error slot carry a 4-child
-    ex_state (levels, levels_lo, hist, step); restoring into today's
-    5-child ExchangeState must fail LOUDLY by default — and under
-    ``allow_reset=("ex_state",)`` (the ``--allow-ckpt-reset`` path)
-    restore everything else while reporting exactly that one named
-    auxiliary tree as reset."""
-    d = str(tmp_path)
+    """Checkpoints written before the EF error slot (4-child ex_state:
+    levels, levels_lo, hist, step) or before the PR 9 defer_tail pending
+    slot (5-child: + error) must fail LOUDLY when restored into today's
+    6-child ExchangeState — and under ``allow_reset=("ex_state",)`` (the
+    ``--allow-ckpt-reset`` path) restore everything else while reporting
+    exactly that one named auxiliary tree as reset."""
     ex = make_exchange(ExchangeConfig(
         compressor="qgenx", quant=QuantConfig(num_levels=15, bucket_size=64)))
     st = ex.init_state()
-    # a plain 4-tuple flattens to the same positional keys "0".."3" the
-    # old 4-field ExchangeState produced
-    legacy = {"params": _trees()["params"],
-              "ex_state": (st.levels, st.levels_lo, st.hist, st.step)}
-    checkpointing.save(d, 7, legacy)
-    templates = {"params": _trees()["params"], "ex_state": st}
-    with pytest.raises(checkpointing.CheckpointStructureError) as ei:
-        checkpointing.restore_with_fallback(d, templates)
-    assert ei.value.tree == "ex_state" and "keys differ" in ei.value.detail
-    step, trees, reset = checkpointing.restore_with_fallback(
-        d, templates, allow_reset=("ex_state",))
-    assert step == 7 and reset == ("ex_state",) and "ex_state" not in trees
-    np.testing.assert_array_equal(np.asarray(trees["params"]["w"]),
-                                  np.ones((4, 3), np.float32))
+    # plain tuples flatten to the same positional keys "0".."k" the old
+    # 4-field (pre-EF) and 5-field (pre-pending) ExchangeState produced
+    legacy_states = {
+        "pre_error": (st.levels, st.levels_lo, st.hist, st.step),
+        "pre_pending": (st.levels, st.levels_lo, st.hist, st.step, st.error),
+    }
+    for tag, legacy_st in legacy_states.items():
+        d = str(tmp_path / tag)
+        legacy = {"params": _trees()["params"], "ex_state": legacy_st}
+        checkpointing.save(d, 7, legacy)
+        templates = {"params": _trees()["params"], "ex_state": st}
+        with pytest.raises(checkpointing.CheckpointStructureError) as ei:
+            checkpointing.restore_with_fallback(d, templates)
+        assert ei.value.tree == "ex_state" and "keys differ" in ei.value.detail
+        step, trees, reset = checkpointing.restore_with_fallback(
+            d, templates, allow_reset=("ex_state",))
+        assert step == 7 and reset == ("ex_state",) and "ex_state" not in trees
+        np.testing.assert_array_equal(np.asarray(trees["params"]["w"]),
+                                      np.ones((4, 3), np.float32))
 
 
 def test_bounded_retry(tmp_path):

@@ -1,5 +1,5 @@
-"""The fused Pallas exchange path of compressed_pmean == the jnp reference
-path, bit-exactly, under identical noise.
+"""The fused Pallas exchange path of the flat qgenx exchange == the jnp
+reference path, bit-exactly, under identical noise.
 
 Multi-device rendezvous starves with interpret-mode Pallas callbacks (see
 tests/_multidev_collectives.py), so the full fused pipeline runs here on a
@@ -20,7 +20,7 @@ import pytest
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.compressed_collectives import compressed_pmean
+from repro.core.exchange import _qgenx_pmean
 from repro.core.quantization import QuantConfig, uniform_levels
 
 N = 3000  # not a bucket multiple — exercises padding
@@ -38,7 +38,7 @@ def _run(mode, bits, use_pallas, use_device_prng=False):
     @jax.jit
     def run(xl, key):
         f = functools.partial(
-            compressed_pmean, axis_name="data", levels=levels, cfg=cfg,
+            _qgenx_pmean, axis_name="data", levels=levels, cfg=cfg,
             mode=mode, use_pallas=use_pallas, use_device_prng=use_device_prng,
         )
         return shard_map(
@@ -61,7 +61,7 @@ def test_fused_pallas_path_matches_jnp_reference(mode, bits):
 def test_device_prng_requires_pallas():
     """The jnp reference path has no on-core PRNG — asking for it must be
     a loud error, not a silent fall-back to the host noise buffer."""
-    from repro.core.compressed_collectives import _quantize_2d
+    from repro.core.exchange import _quantize_2d
 
     cfg = QuantConfig(num_levels=5, bucket_size=256, bits=4)
     x2d = jnp.zeros((4, 256), jnp.float32)
@@ -82,7 +82,7 @@ def test_device_prng_exchange_traces():
 
     def run(xl, key):
         return shard_map(
-            lambda a, k: compressed_pmean(
+            lambda a, k: _qgenx_pmean(
                 a, "data", levels, k, cfg, mode="two_phase",
                 use_pallas=True, use_device_prng=True,
             ),

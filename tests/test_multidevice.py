@@ -21,7 +21,10 @@ def _run(args, timeout=900):
     )
 
 
-def test_compressed_collectives_8dev():
+def test_quantized_collectives_8dev():
+    """Exchange.pmean / pmean_tree unbiasedness + replica agreement on 8
+    devices (payload migrated off the retired compressed_collectives
+    wrappers onto the Exchange seam)."""
     r = _run([os.path.join(ROOT, "tests", "_multidev_collectives.py")])
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "ALL OK" in r.stdout
@@ -71,6 +74,18 @@ def test_error_feedback_8dev():
     and the no-EF qgenx path stays bitwise equal to the legacy
     ``compressed_pmean_tree`` across bits{4,8} x mode{gather,two_phase}."""
     r = _run([os.path.join(ROOT, "tests", "_multidev_error_feedback.py")],
+             timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
+def test_bucketed_8dev():
+    """Bucketed overlapped exchange acceptance: per-bucket recorder ==
+    analytic wire == the train step's wire_bytes metric with
+    num_buckets=4, and the defer_tail pending buffer advances on
+    successful syncs, bit-freezes through a guard-rejected step, and
+    survives a checkpoint round-trip."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_bucketed.py")],
              timeout=1200)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "ALL OK" in r.stdout

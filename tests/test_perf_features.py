@@ -51,18 +51,19 @@ import math
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
-from repro.core.compressed_collectives import compressed_pmean_leafwise
-from repro.core.quantization import QuantConfig, uniform_levels
+from repro.core.exchange import ExchangeConfig, make_exchange
+from repro.core.quantization import QuantConfig
 mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
 tree = {"w": jnp.asarray(np.random.RandomState(0).randn(4, 16, 64), jnp.float32)}
 true = np.asarray(tree["w"]).mean(0)
 for bits, s in ((8, 15), (4, 5)):
     CFG = QuantConfig(num_levels=s, bits=bits, q_norm=math.inf, bucket_size=64)
-    LV = uniform_levels(s)
+    EX = make_exchange(ExchangeConfig(compressor="qgenx", quant=CFG,
+                                      axis_name="data", mode="leafwise"))
     @jax.jit
     def run(t, key):
         def f(tl, k):
-            out = compressed_pmean_leafwise({"w": tl["w"][0]}, "data", LV, k, CFG)
+            out, _ = EX.pmean_tree({"w": tl["w"][0]}, EX.init_state(), k)
             return {"w": out["w"][None]}
         return shard_map(f, mesh=mesh, in_specs=({"w": P("data",None,None)}, P()),
                          out_specs={"w": P("data",None,None)}, check_rep=False)(t, key)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compressed_collectives import (
+from repro.core.exchange import (
     _quantize_2d,
     exchange_buffer_bytes,
     wire_bytes_per_device,
