@@ -46,6 +46,8 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro.core import retry as retry_mod
+
 
 class CheckpointError(Exception):
     """Base class for checkpoint failures."""
@@ -289,7 +291,7 @@ def restore_with_fallback(
     if not candidates:
         raise CheckpointCorruptError(f"no checkpoints found at {path}")
     last_err: CheckpointError | None = None
-    for step in candidates[:max_retries]:
+    for _attempt, step in retry_mod.attempts(candidates, max_retries):
         live = dict(templates)
         reset: list[str] = []
         try:

@@ -21,7 +21,7 @@ tests EXERCISE every guard instead of merely shipping it:
 
 Grammar of a fault spec (events joined by ``;``)::
 
-    kind@STEP[-END][:worker=I]
+    kind@STEP[-END][:worker=I | :slot=I]
 
     nan_grad@5:worker=2        NaN-poison worker 2's local gradients at step 5
     drop@8-10:worker=3         worker 3 drops out of the exchange, steps 8-10
@@ -30,10 +30,26 @@ Grammar of a fault spec (events joined by ``;``)::
     ckpt_drop_meta@12          delete the meta written for step 12
     ckpt_garbage_latest@12     scribble garbage over the ``latest`` pointer
 
-Step indices refer to the TRAIN-LOOP step (the value the train loop
-passes as ``fault_step``), not the optimizer's ``count`` — a rejected
-step does not advance ``count``, and a schedule keyed on it would re-fire
-the same fault forever.
+    nan_logits@5:slot=2        NaN-poison decode slot 2's logits at step 5
+    slot_drop@8                forcibly evict every active request at step 8
+    page_corrupt@6:slot=1      scribble NaN over a cache page of slot 1
+    request_stall@4:slot=0     slot 0's request stops making progress
+    crash@7                    the serve process dies (os._exit) before step 7
+
+The serve kinds (``SERVE_KINDS``) belong to the decode loop of
+:class:`repro.serve.engine.ServeEngine`; the train kinds to the train
+step.  Both CLIs register the SAME ``--fault-spec`` flag through
+:func:`add_fault_spec_flag` and parse through :meth:`FaultSpec.parse_cli`,
+which rejects kinds outside the caller's scope — the grammar cannot
+drift between the two entry points.
+
+Step indices refer to the WALL-CLOCK loop step (the value the loop
+passes as ``fault_step``): the train-loop step for training (not the
+optimizer's ``count`` — a rejected step does not advance ``count``, and
+a schedule keyed on it would re-fire the same fault forever) and the
+packed decode-wave index for serving (guard retries re-run the SAME
+wave, so a persistent ``nan_logits`` event keeps firing across retries —
+that is what drives a slot into quarantine).
 """
 
 from __future__ import annotations
@@ -53,17 +69,33 @@ Array = jax.Array
 # kinds are applied between steps by inject_ckpt_fault
 DEVICE_KINDS = ("nan_grad", "drop", "wire_corrupt")
 HOST_KINDS = ("ckpt_truncate", "ckpt_drop_meta", "ckpt_garbage_latest")
+# serve-loop kinds: nan_logits is traced into the packed decode step;
+# the rest are host events the engine applies between decode waves
+SERVE_KINDS = ("nan_logits", "slot_drop", "page_corrupt", "request_stall",
+               "crash")
+ALL_KINDS = DEVICE_KINDS + HOST_KINDS + SERVE_KINDS
+
+# what each CLI accepts: the ckpt_* kinds are shared (serve snapshots go
+# through the same checkpoint machinery train uses)
+TRAIN_SCOPE = DEVICE_KINDS + HOST_KINDS
+SERVE_SCOPE = SERVE_KINDS + HOST_KINDS
+
+#: exit code of a process killed by a scheduled ``crash`` event — the
+#: recovery tests assert on it to distinguish the simulated crash from a
+#: genuine failure of the serve CLI.
+CRASH_EXIT_CODE = 13
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
     """One scheduled fault: ``kind`` active for steps [start, end],
-    optionally scoped to one worker (None = every worker)."""
+    optionally scoped to one worker or one decode slot (None = all)."""
 
     kind: str
     start: int
     end: int
     worker: Optional[int] = None
+    slot: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +113,7 @@ class FaultSpec:
 
     @classmethod
     def parse(cls, text: Optional[str]) -> "FaultSpec":
-        """``"nan_grad@5:worker=2;drop@8-10:worker=3"`` -> FaultSpec.
+        """``"nan_grad@5:worker=2;nan_logits@5:slot=2"`` -> FaultSpec.
 
         Unknown kinds, malformed steps, or missing ``@`` raise ValueError
         naming the offending event (fault schedules are test/CI inputs —
@@ -98,18 +130,27 @@ class FaultSpec:
                 raise ValueError(f"fault event {raw!r} has no '@STEP'")
             kind, _, rest = raw.partition("@")
             kind = kind.strip()
-            if kind not in DEVICE_KINDS + HOST_KINDS:
+            if kind not in ALL_KINDS:
                 raise ValueError(
-                    f"unknown fault kind {kind!r}; known: "
-                    f"{DEVICE_KINDS + HOST_KINDS}"
+                    f"unknown fault kind {kind!r}; known: {ALL_KINDS}"
                 )
             steps, _, opts = rest.partition(":")
-            worker = None
+            worker = slot = None
             if opts:
                 k, _, v = opts.partition("=")
-                if k.strip() != "worker":
+                k = k.strip()
+                if k not in ("worker", "slot"):
                     raise ValueError(f"unknown fault option {opts!r} in {raw!r}")
-                worker = int(v)
+                try:
+                    val = int(v)
+                except ValueError:
+                    raise ValueError(
+                        f"bad {k} index {v!r} in {raw!r}"
+                    ) from None
+                if k == "worker":
+                    worker = val
+                else:
+                    slot = val
             lo, _, hi = steps.partition("-")
             try:
                 start = int(lo)
@@ -118,8 +159,27 @@ class FaultSpec:
                 raise ValueError(f"bad step range {steps!r} in {raw!r}") from None
             if end < start:
                 raise ValueError(f"empty step range {steps!r} in {raw!r}")
-            events.append(FaultEvent(kind, start, end, worker))
+            events.append(FaultEvent(kind, start, end, worker, slot))
         return cls(tuple(events))
+
+    @classmethod
+    def parse_cli(cls, text: Optional[str], scope: str) -> "FaultSpec":
+        """Parse a CLI ``--fault-spec`` value and enforce the caller's
+        scope: ``scope="train"`` accepts train + checkpoint kinds,
+        ``scope="serve"`` accepts serve + checkpoint kinds.  A serve-only
+        kind handed to train (or vice versa) is a user error the CLI must
+        name, not silently ignore."""
+        allowed = {"train": TRAIN_SCOPE, "serve": SERVE_SCOPE}.get(scope)
+        if allowed is None:
+            raise ValueError(f"unknown fault scope {scope!r}")
+        spec = cls.parse(text)
+        for e in spec.events:
+            if e.kind not in allowed:
+                raise ValueError(
+                    f"fault kind {e.kind!r} is not a {scope} fault; "
+                    f"{scope} accepts: {allowed}"
+                )
+        return spec
 
     # -- queries ---------------------------------------------------------
 
@@ -139,6 +199,31 @@ class FaultSpec:
         return tuple(
             e.kind for e in self.events
             if e.kind in HOST_KINDS and e.start <= step <= e.end
+        )
+
+    # -- serve-loop queries (host side, exact wall-clock step) -----------
+
+    @property
+    def has_serve_device_events(self) -> bool:
+        """True when the jitted decode step needs the ``fault_step`` arg."""
+        return self.has("nan_logits")
+
+    def slots_hit(self, kind: str, step: int) -> Optional[list]:
+        """Slot indices a host serve fault targets at ``step``; ``[None]``
+        entries mean every active slot; ``None`` = no event active."""
+        hits = [
+            e.slot for e in self.events
+            if e.kind == kind and e.start <= step <= e.end
+        ]
+        return hits or None
+
+    def crash_at(self, step: int) -> bool:
+        """True when a scheduled ``crash`` kills the process before the
+        decode wave at ``step`` runs (the snapshot for earlier waves is
+        already on disk — the observable state of a real mid-decode kill)."""
+        return any(
+            e.kind == "crash" and e.start <= step <= e.end
+            for e in self.events
         )
 
     # -- traced injectors (compiled into the step) ----------------------
@@ -176,6 +261,32 @@ class FaultSpec:
         bad = self._active(events, step, worker_ix)
         poison = jnp.where(bad, jnp.float32(jnp.nan), jnp.float32(0.0))
         return jax.tree_util.tree_map(lambda g: g + poison.astype(g.dtype), tree)
+
+    def poison_logits(self, logits, step: Array):
+        """NaN-poison per-slot rows of the packed decode logits while a
+        ``nan_logits`` event is active — the bad-decode failure mode the
+        serve guard must reject.
+
+        Injected at the point the guard consumes the logits (AFTER the
+        cross-device ensemble aggregation), so the poison stays exactly
+        per-slot: healthy rows are mathematically untouched, which is
+        what makes the "healthy slots bit-identical to a clean run"
+        acceptance check meaningful.  An event without ``slot=`` poisons
+        every row.  Like every traced injector, an empty event list
+        returns the input unchanged (same jaxpr as a fault-free run).
+        """
+        events = self.of_kind("nan_logits")
+        if not events:
+            return logits
+        n = logits.shape[0]
+        rows = jnp.arange(n)
+        bad = jnp.zeros((n,), bool)
+        for e in events:
+            on = (step >= e.start) & (step <= e.end)
+            row_hit = jnp.ones((n,), bool) if e.slot is None else (rows == e.slot)
+            bad = bad | (on & row_hit)
+        poison = jnp.where(bad, jnp.float32(jnp.nan), jnp.float32(0.0))
+        return logits + poison[:, None].astype(logits.dtype)
 
     def corrupt_mean(self, tree, step: Array):
         """Inject Inf into the EXCHANGED aggregate while a ``wire_corrupt``
@@ -239,6 +350,40 @@ def inject_ckpt_fault(path: str, step: int, kind: str) -> None:
             f.write("not-a-step\n")
     else:
         raise ValueError(f"unknown checkpoint fault {kind!r}; known: {HOST_KINDS}")
+
+
+# ---------------------------------------------------------------------------
+# The one --fault-spec CLI entry point (train.py and serve.py both use it)
+# ---------------------------------------------------------------------------
+
+
+def add_fault_spec_flag(ap, scope: str) -> None:
+    """Register ``--fault-spec`` on an argparse parser with the shared
+    grammar help.  ``scope`` is "train" or "serve"; parse the resulting
+    value with :func:`parse_fault_spec_arg` so out-of-scope kinds fail
+    with the same pointed message from either CLI."""
+    allowed = {"train": TRAIN_SCOPE, "serve": SERVE_SCOPE}[scope]
+    ap.add_argument(
+        "--fault-spec", default="",
+        help=(
+            "deterministic fault schedule, events joined by ';': "
+            "kind@STEP[-END][:worker=I|:slot=I].  "
+            f"{scope} kinds: {', '.join(allowed)}"
+        ),
+    )
+
+
+def parse_fault_spec_arg(text: Optional[str], scope: str) -> FaultSpec:
+    """Parse a CLI ``--fault-spec`` value; exits code 2 (argparse-style
+    usage error) with a pointed message on a bad grammar or an
+    out-of-scope kind instead of an unhandled traceback."""
+    import sys
+
+    try:
+        return FaultSpec.parse_cli(text, scope)
+    except ValueError as e:
+        print(f"[{scope}] bad --fault-spec: {e}", file=sys.stderr)
+        raise SystemExit(2)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,81 @@
+"""Bounded retry with deterministic jittered exponential backoff.
+
+One policy object serves every retry loop in the runtime — the
+checkpoint fallback walk (:func:`repro.checkpoint.checkpointing.
+restore_with_fallback`), the serve scheduler's re-admission of shed
+requests, and the serve CLI's crash-recovery supervisor — so "how many
+times, how long apart" is decided in exactly one place per call site
+instead of re-derived inline.
+
+Jitter is DETERMINISTIC: a crc32 hash of ``(token, attempt)`` scaled
+into ``[1 - jitter, 1]`` replaces ``random.random()``.  Two callers
+retrying the same resource de-synchronize (different tokens hash apart),
+while a replayed run backs off identically — the same property the fault
+injector's seed-free schedule relies on.  Delay units are whatever clock
+the caller lives on (seconds for the supervisor, decode steps for the
+scheduler); the policy only does arithmetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Iterable, Iterator, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Exponential backoff: attempt ``a`` waits ``base * factor**a``
+    (capped at ``cap``), scaled by a deterministic jitter factor in
+    ``[1 - jitter, 1]`` derived from ``(token, attempt)``."""
+
+    base: float = 1.0
+    factor: float = 2.0
+    cap: float = 60.0
+    max_attempts: int = 3
+    jitter: float = 0.5
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.base < 0 or self.factor < 1.0 or self.cap < 0:
+            raise ValueError(
+                f"need base >= 0, factor >= 1, cap >= 0; got "
+                f"base={self.base} factor={self.factor} cap={self.cap}"
+            )
+        if not (0.0 <= self.jitter < 1.0):
+            raise ValueError(f"jitter must be in [0, 1), got {self.jitter}")
+
+    def delay(self, attempt: int, token=0) -> float:
+        """Delay before retry number ``attempt`` (0-based) for the caller
+        identified by ``token`` (any str()-able value, e.g. a request id)."""
+        if attempt < 0:
+            raise ValueError(f"attempt must be >= 0, got {attempt}")
+        raw = min(self.cap, self.base * self.factor ** attempt)
+        if not self.jitter:
+            return raw
+        h = zlib.crc32(f"{token}:{attempt}".encode()) / 0xFFFFFFFF
+        return raw * (1.0 - self.jitter * h)
+
+    def exhausted(self, attempt: int) -> bool:
+        """True once ``attempt`` retries have been spent."""
+        return attempt >= self.max_attempts
+
+
+def attempts(candidates: Iterable[T], max_attempts: int) -> Iterator[Tuple[int, T]]:
+    """Bounded enumeration: yield ``(attempt_index, candidate)`` for at
+    most ``max_attempts`` candidates.
+
+    The shape of every "walk a candidate list, give up after K" loop —
+    a directory of garbage checkpoints fails fast instead of scanning
+    forever, and the bound lives next to the policy instead of inside
+    a slice expression at the call site.
+    """
+    if max_attempts < 1:
+        raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+    for i, cand in enumerate(candidates):
+        if i >= max_attempts:
+            return
+        yield i, cand

@@ -184,10 +184,7 @@ def main(argv=None):
                     help="watchdog: roll back after this many CONSECUTIVE "
                          "rejected steps (a >=50%% rejection rate over a "
                          "4x window also triggers)")
-    ap.add_argument("--fault-spec", default="",
-                    help="deterministic fault schedule for tests/CI, e.g. "
-                         "'nan_grad@5:worker=2;drop@8-10:worker=3;"
-                         "ckpt_truncate@12' (core/faults.py grammar)")
+    faults.add_fault_spec_flag(ap, scope="train")
     ap.add_argument("--allow-ckpt-reset", action="store_true",
                     help="on restore, reset INCOMPATIBLE auxiliary state "
                          "(ex_state) to fresh init instead of exiting; "
@@ -238,7 +235,7 @@ def main(argv=None):
     if args.optimizer == "qgenx":
         print(f"[train] qgenx method={args.method}", flush=True)
 
-    fault_spec = faults.FaultSpec.parse(args.fault_spec)
+    fault_spec = faults.parse_fault_spec_arg(args.fault_spec, scope="train")
     if fault_spec.events:
         print(f"[train] fault schedule: {args.fault_spec}", flush=True)
         if fault_spec.has_device_events and not args.guard:

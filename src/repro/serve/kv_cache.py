@@ -192,6 +192,36 @@ def init_paged_cache(pc: PagedCacheConfig) -> dict:
     return cache
 
 
+def corrupt_page(cache: dict, pc: PagedCacheConfig, page: int,
+                 lead: bool = False, device=None) -> dict:
+    """NaN-scribble one arena page across every layer — the fault
+    injector's model of storage corruption (``page_corrupt`` events).
+
+    Only f32 arrays are touched (the per-token norms of quantized
+    segments, the raw K of fp32 segments): one NaN norm is enough to make
+    every dequantized feature of that token non-finite, which is exactly
+    the signal the decode guard must catch.  The page's OWNER reads it
+    through its page table and sees NaN attention scores at valid
+    positions; no other slot can — pages are exclusively owned and
+    masked reads replace scores before softmax.
+
+    ``lead=True`` handles the multi-device arena (leading device axis);
+    ``device`` then picks one replica (None = all) — corrupting a single
+    ensemble member exercises the psum'd one-bad-device-vetoes flag.
+    """
+    out = dict(cache)
+    for j, seg in enumerate(pc.segments):
+        name = f"seg{j}_k_norms" if seg.quant is not None else f"seg{j}_k"
+        arr = out[name]
+        if lead:
+            sel = slice(None) if device is None else device
+            arr = arr.at[sel, :, page].set(jnp.float32(jnp.nan))
+        else:
+            arr = arr.at[:, page].set(jnp.float32(jnp.nan))
+        out[name] = arr
+    return out
+
+
 def cache_bytes(pc: PagedCacheConfig) -> int:
     """Bytes the arena actually allocates (static; equals the sum of the
     live arrays' nbytes — asserted in tests)."""

@@ -1,0 +1,169 @@
+"""Subprocess payload: hardened serving acceptance on 8 host devices.
+
+Three legs, mirroring the DESIGN §11 acceptance criteria:
+
+1. **Guarded fault drill (in-process).**  A guarded 8-device serve with
+   ``nan_logits@5:slot=2;slot_drop@8`` against a clean guarded run of
+   the same workload: the poisoned slot is evicted with a typed
+   ``quarantined`` result after the full re-keyed retry budget, the
+   ``slot_drop`` victims finish ``dropped``, every request that still
+   finished ``ok`` produced BIT-IDENTICAL tokens to the clean run
+   (request-keyed noise + attempt-0 commits + exchange state advancing
+   only on attempt 0), and the arena refills completely.
+2. **Crash (CLI subprocess).**  The serve CLI with ``crash@6`` and
+   periodic snapshots dies mid-decode with the dedicated crash exit
+   code — no cleanup, snapshot state for waves past the last cadence
+   point is lost, exactly like a kill.
+3. **Restart (CLI subprocess).**  Re-launching against the same
+   snapshot dir resumes every in-flight request from its last committed
+   token (the crash schedule is dropped — the resumed clock re-plays
+   wave 6) and drives the whole workload to typed ``ok`` results with
+   full generation budgets and zero page leak.
+"""
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+
+from repro.configs.registry import get_config  # noqa: E402
+from repro.core import faults  # noqa: E402
+from repro.core.exchange import ExchangeConfig  # noqa: E402
+from repro.core.quantization import QuantConfig  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.serve.engine import ServeEngine  # noqa: E402
+from repro.serve.scheduler import Request  # noqa: E402
+
+
+def mk_reqs():
+    return [
+        Request(rid=r, prompt=[(r * 5 + j) % 64 + 1 for j in range(4)],
+                max_new=8)
+        for r in range(6)
+    ]
+
+
+def mk_engine(cfg, params, mesh, exc, **kw):
+    return ServeEngine(
+        cfg, params, policy="int8", page_size=4, n_slots=3, max_len=16,
+        seed=0, exchange=exc, mesh=mesh, **kw,
+    )
+
+
+def leg_guarded_fault_drill():
+    cfg = get_config("gemma-2b").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = make_host_mesh(8)
+    exc = ExchangeConfig(
+        compressor="qgenx",
+        quant=QuantConfig(num_levels=15, bits=8, bucket_size=512),
+        mode="two_phase", axis_name="data",
+    )
+
+    clean = mk_engine(cfg, params, mesh, exc, guard=True).run(mk_reqs())
+    assert len(clean) == 6 and all(len(t) == 8 for t in clean.values())
+
+    spec = faults.FaultSpec.parse("nan_logits@5:slot=2;slot_drop@8")
+    eng = mk_engine(cfg, params, mesh, exc, guard=True, guard_retries=2,
+                    fault_spec=spec)
+    events: list = []
+    out = eng.run(mk_reqs(), events=events)
+    res = eng.results()
+
+    assert set(res) == set(range(6)), sorted(res)
+    # slot 2 held rid 2 at wave 5: quarantined after BOTH re-keyed
+    # retries re-hit the persistent nan_logits event (fault clock is the
+    # wave index; retries re-run the same wave)
+    assert res[2].kind == "quarantined", res[2]
+    assert len(res[2].tokens) == 6  # prefill + waves 0..4 committed
+    assert eng.sched.stats["guard_retries"] == 2
+    assert ("evict:quarantined", 2, 2, 5) in events, events
+    dropped = {rid for rid, rr in res.items() if rr.kind == "dropped"}
+    assert dropped, res  # slot_drop@8 hit whatever was active
+    healthy = {rid for rid, rr in res.items() if rr.ok}
+    assert healthy and healthy.isdisjoint(dropped | {2})
+    # the acceptance bar: every request the faults did NOT touch is
+    # bit-identical to the clean run, token for token
+    for rid in healthy:
+        assert out[rid] == clean[rid], (rid, out[rid], clean[rid])
+    assert eng.allocator.n_free == eng.pc.num_pages  # no page leak
+    # retries are real invocations: they move real bytes over the wire
+    assert eng.wire_bytes > clean_wire_floor(eng)
+    print(f"[drill] quarantined=2 dropped={sorted(dropped)} "
+          f"healthy={sorted(healthy)} retries={eng.sched.stats['guard_retries']}")
+
+
+def clean_wire_floor(eng):
+    return eng.wire_per_step * eng.sched.decode_steps
+
+
+def _cli(extra, env):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--reduced", "--host-devices", "8",
+         "--batch", "3", "--requests", "6", "--prompt-len", "6",
+         "--gen", "8", "--kv-bits", "8", "--logit-exchange", "int8",
+         "--guard", "--seed", "3"] + extra,
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+
+
+def leg_crash_restart():
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    with tempfile.TemporaryDirectory() as snap:
+        common = ["--snapshot-dir", snap, "--snapshot-every", "2"]
+        r1 = _cli(common + ["--fault-spec", "crash@6"], env)
+        assert r1.returncode == faults.CRASH_EXIT_CODE, (
+            r1.returncode, r1.stdout[-2000:], r1.stderr[-2000:],
+        )
+        assert "fault: crash before decode wave 6" in r1.stdout, r1.stdout
+
+        # restart WITHOUT the crash schedule: the resumed clock re-plays
+        # wave 6, so a still-scheduled crash@6 would just fire again
+        r2 = _cli(common, env)
+        assert r2.returncode == 0, (
+            r2.returncode, r2.stdout[-2000:], r2.stderr[-2000:],
+        )
+        m = re.search(r"resumed from snapshot step (\d+): in_flight=(\d+) "
+                      r"waiting=(\d+) done=(\d+)", r2.stdout)
+        assert m, r2.stdout
+        step, in_flight = int(m.group(1)), int(m.group(2))
+        assert step == 6 and in_flight >= 1, m.groups()
+        committed = {
+            int(r): int(n)
+            for r, n in re.findall(r"resume rid=(\d+) committed=(\d+)",
+                                   r2.stdout)
+        }
+        assert committed and all(n > 0 for n in committed.values()), committed
+
+        # every request — pre-crash finished, resumed in-flight, and
+        # still-queued — must end ok with its FULL generation budget
+        # (the CLI workload budget for rid r is max(1, gen - 2*(r%3)))
+        results = {
+            int(r): (k, int(n))
+            for r, k, n in re.findall(
+                r"result rid=(\d+) kind=(\w+) tokens=(\d+)", r2.stdout)
+        }
+        assert set(results) == set(range(6)), results
+        for r, (kind, n) in results.items():
+            assert kind == "ok", (r, kind)
+            assert n == max(1, 8 - 2 * (r % 3)), (r, n)
+        assert re.search(r"pages free=(\d+)/\1\b", r2.stdout), r2.stdout
+        print(f"[crash] resumed step={step} in_flight={in_flight} "
+              f"committed={committed}")
+
+
+def main():
+    leg_guarded_fault_drill()
+    leg_crash_restart()
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -101,6 +101,21 @@ def test_serve_wire_accounting_8dev():
     assert "ALL OK" in r.stdout
 
 
+def test_serve_faults_8dev():
+    """Hardened-serving acceptance: guarded 8-device fault drill
+    (nan_logits@5:slot=2 quarantined typed after the full re-keyed retry
+    budget, slot_drop victims dropped typed, every surviving request
+    bit-identical to a clean guarded run, arena fully refilled) plus the
+    crash/restart legs through the serve CLI (crash@6 dies with the
+    dedicated exit code mid-decode; a relaunch against the same snapshot
+    dir resumes every in-flight request from its last committed token
+    and finishes the whole workload ok with zero page leak)."""
+    r = _run([os.path.join(ROOT, "tests", "_multidev_serve_faults.py")],
+             timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL OK" in r.stdout
+
+
 def test_serve_cli_8dev():
     """The serve CLI on 8 forced host devices: paged int8 cache, packed
     continuous batching, logit exchange reporting wire bytes."""

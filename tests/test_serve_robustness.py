@@ -1,0 +1,498 @@
+"""Hardened serving runtime tests (DESIGN §11).
+
+Four layers, mirroring the tentpole pillars:
+
+* retry/backoff math (``core/retry.py``) and the serve fault grammar
+  (``core/faults.py``: ``kind@STEP[:slot=I]``, scope-checked CLI entry);
+* scheduler robustness — deadlines/TTLs, tail shedding with jittered
+  backoff re-admission, typed evictions — including the property-based
+  liveness drive (random arrival/completion/failure schedules: every
+  request reaches a typed terminal outcome, the arena refills
+  completely, FIFO order holds among never-shed requests);
+* the decode guard on a real reduced model: clean runs bit-identical
+  with the guard on, persistent ``nan_logits``/``page_corrupt`` faults
+  drive bounded re-keyed retries into quarantine WITHOUT perturbing
+  healthy slots' tokens, transient failures recover on retry;
+* crash-safe snapshots: atomic write/restore round-trip resumes every
+  in-flight request from its last committed token, torn snapshots walk
+  back to the last intact one, config-fingerprint mismatches refuse.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.checkpoint import checkpointing
+from repro.core import faults
+from repro.core.retry import BackoffPolicy, attempts
+from repro.serve import kv_cache as K
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request, Scheduler
+
+from test_serve import arch  # reduced config + params, cached
+
+
+def mk_engine(cfg, params, **kw):
+    kw.setdefault("policy", "int8")
+    kw.setdefault("page_size", 4)
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("max_len", 16)
+    kw.setdefault("seed", 0)
+    return ServeEngine(cfg, params, **kw)
+
+
+def mk_reqs(n, plen=4, gen=6):
+    return [
+        Request(rid=r, prompt=[(r * 7 + j) % 40 + 1 for j in range(plen)],
+                max_new=gen)
+        for r in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# core/retry.py
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_policy_math():
+    p = BackoffPolicy(base=1.0, factor=2.0, cap=5.0, max_attempts=3,
+                      jitter=0.5)
+    raw = [1.0, 2.0, 4.0, 5.0, 5.0]  # exponential, capped
+    for a, r in enumerate(raw):
+        d = p.delay(a, token=42)
+        assert 0.5 * r <= d <= r  # jitter scales into [1-jitter, 1]
+        assert d == p.delay(a, token=42)  # deterministic replay
+    # different tokens de-synchronize (crc32 jitter, not a shared phase)
+    assert len({round(p.delay(1, token=t), 9) for t in range(16)}) > 1
+    nj = BackoffPolicy(base=1.0, factor=2.0, cap=5.0, jitter=0.0)
+    assert nj.delay(2) == 4.0
+    assert not p.exhausted(2) and p.exhausted(3)
+    with pytest.raises(ValueError):
+        BackoffPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        BackoffPolicy(jitter=1.0)
+    with pytest.raises(ValueError):
+        BackoffPolicy(factor=0.5)
+    with pytest.raises(ValueError):
+        p.delay(-1)
+
+
+def test_attempts_bounded():
+    assert list(attempts("abcdef", 3)) == [(0, "a"), (1, "b"), (2, "c")]
+    assert list(attempts("ab", 5)) == [(0, "a"), (1, "b")]
+    with pytest.raises(ValueError):
+        list(attempts("ab", 0))
+
+
+# ---------------------------------------------------------------------------
+# Fault grammar: serve kinds, slot scoping, one CLI entry point
+# ---------------------------------------------------------------------------
+
+
+def test_fault_grammar_serve_kinds():
+    spec = faults.FaultSpec.parse(
+        "nan_logits@5:slot=2;slot_drop@8;crash@7;page_corrupt@3-4:slot=1"
+    )
+    assert spec.has_serve_device_events
+    e = spec.of_kind("nan_logits")[0]
+    assert (e.start, e.end, e.slot, e.worker) == (5, 5, 2, None)
+    assert spec.slots_hit("slot_drop", 8) == [None]  # unscoped: all slots
+    assert spec.slots_hit("slot_drop", 7) is None
+    assert spec.slots_hit("page_corrupt", 4) == [1]
+    assert spec.crash_at(7) and not spec.crash_at(6)
+    with pytest.raises(ValueError):
+        faults.FaultSpec.parse("nan_logits@5:slot=x")
+    with pytest.raises(ValueError):
+        faults.FaultSpec.parse("nan_logits@5:lane=2")
+
+
+def test_fault_scope_one_entry_point():
+    # train CLI rejects serve kinds, serve CLI rejects train kinds, and
+    # the shared checkpoint kinds pass both — the grammar cannot drift
+    with pytest.raises(ValueError, match="not a train fault"):
+        faults.FaultSpec.parse_cli("nan_logits@5:slot=2", scope="train")
+    with pytest.raises(ValueError, match="not a serve fault"):
+        faults.FaultSpec.parse_cli("nan_grad@5:worker=2", scope="serve")
+    assert faults.FaultSpec.parse_cli("ckpt_truncate@3", scope="serve").events
+    assert faults.FaultSpec.parse_cli("ckpt_truncate@3", scope="train").events
+    assert faults.FaultSpec.parse_cli("drop@2:worker=1", scope="train").events
+    with pytest.raises(SystemExit) as e:
+        faults.parse_fault_spec_arg("nan_grad@5", scope="serve")
+    assert e.value.code == 2
+
+
+def test_poison_logits_traced():
+    logits = jnp.ones((3, 7), jnp.float32)
+    spec = faults.FaultSpec.parse("nan_logits@2:slot=1")
+    hit = np.asarray(spec.poison_logits(logits, jnp.int32(2)))
+    assert np.isnan(hit[1]).all()
+    assert np.isfinite(hit[0]).all() and np.isfinite(hit[2]).all()
+    miss = np.asarray(spec.poison_logits(logits, jnp.int32(3)))
+    assert np.isfinite(miss).all()
+    # empty spec: identity (fault-free jaxpr untouched)
+    assert faults.FaultSpec.parse("").poison_logits(logits, 0) is logits
+    allrows = faults.FaultSpec.parse("nan_logits@0")
+    assert np.isnan(np.asarray(
+        allrows.poison_logits(logits, jnp.int32(0)))).all()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: deadlines, shedding, backoff re-admission, typed eviction
+# ---------------------------------------------------------------------------
+
+
+def _mk_sched(num_pages=12, n_slots=2, **kw):
+    al = K.PageAllocator(num_pages)
+    return Scheduler(n_slots, page_size=4, blocks_per_seq=3, allocator=al,
+                     **kw), al
+
+
+def test_scheduler_deadlines():
+    clock = {"t": 0.0}
+    sched, al = _mk_sched(num_pages=3, clock=lambda: clock["t"])
+    # queue timeout: second request cannot admit (pages exhausted by the
+    # first) and expires while waiting
+    sched.submit(Request(0, prompt=[1] * 4, max_new=8, deadline=100.0))
+    sched.submit(Request(1, prompt=[1] * 4, max_new=8, deadline=5.0))
+    assert [s.req.rid for _, s in sched.admit()] == [0]
+    clock["t"] = 6.0
+    sched.admit()
+    assert sched.results[1].kind == "queue_timeout"
+    assert not sched.waiting
+    # active deadline: request 0 expires mid-decode; pages return
+    clock["t"] = 101.0
+    ev = sched.expire_active()
+    assert [(i, k) for i, _, k in ev] == [(0, "deadline")]
+    assert sched.results[0].kind == "deadline"
+    assert al.n_free == 3 and not sched.has_work()
+
+
+def test_scheduler_stall_patience():
+    sched, al = _mk_sched()
+    sched.submit(Request(0, prompt=[1] * 4, max_new=4))
+    sched.admit()
+    slot = sched.slots[0]
+    slot.last_progress = 0
+    sched.decode_steps = 3
+    assert sched.expire_active(stall_patience=4) == []
+    sched.decode_steps = 5
+    ev = sched.expire_active(stall_patience=4)
+    assert [k for _, _, k in ev] == ["stalled"]
+    assert al.n_free == 12
+
+
+def test_scheduler_shed_backoff_readmit():
+    clock = {"t": 0.0}
+    policy = BackoffPolicy(base=4.0, factor=2.0, cap=32.0, max_attempts=2,
+                           jitter=0.0)
+    sched, al = _mk_sched(num_pages=3, n_slots=1, clock=lambda: clock["t"],
+                          max_queue=1, backoff=policy)
+    for r in range(4):
+        sched.submit(Request(r, prompt=[1] * 4, max_new=8))
+    sched.admit()
+    # rid 0 active, rid 1 keeps its queue seat, rids 2+3 shed from the tail
+    assert [s.req.rid for _, s in sched.active()] == [0]
+    assert [q.req.rid for q in sched.waiting] == [1]
+    assert sorted(q.req.rid for q in sched.backoff) == [2, 3]
+    assert sched.stats["shed_transient"] == 2
+    # not eligible yet: backoff delay is 4 ticks
+    sched.admit()
+    assert sorted(q.req.rid for q in sched.backoff) == [2, 3]
+    clock["t"] = 5.0
+    sched.admit()  # both eligible; re-admitted in original order
+    assert [q.req.rid for q in sched.waiting][:1] == [1]
+    assert sched.stats["readmitted"] == 2
+    # they overflow again (queue bound 1) -> second shed; a third would
+    # exceed max_attempts=2 and become a permanent typed rejection
+    assert sched.stats["shed_transient"] == 4
+    clock["t"] = 40.0
+    sched.admit()
+    assert {rr.rid for rr in sched.results.values() if rr.kind == "shed"} \
+        == {2, 3}
+    assert sched.results[2].tokens == ()
+
+
+def test_scheduler_watermark_gates_readmission():
+    clock = {"t": 0.0}
+    sched, al = _mk_sched(num_pages=4, n_slots=2, clock=lambda: clock["t"],
+                          max_queue=0, low_watermark=0.5)
+    sched.max_queue = 1
+    sched.submit(Request(0, prompt=[1] * 4, max_new=8))  # 3 pages
+    sched.submit(Request(1, prompt=[1] * 4, max_new=8))
+    sched.submit(Request(2, prompt=[1] * 4, max_new=8))
+    sched.admit()
+    assert [q.req.rid for q in sched.backoff] == [2]
+    clock["t"] = 100.0  # long past the backoff delay
+    sched.admit()
+    # 1/4 pages free < 0.5 watermark: re-admission stays closed
+    assert [q.req.rid for q in sched.backoff] == [2]
+    assert sched.page_pressure == 0.75
+    sched.evict(0, "dropped")  # frees 3 pages -> 4/4 free
+    sched.admit()
+    assert not sched.backoff
+    # force_readmit is the idle override (ignores delay and watermark)
+    assert not sched.force_readmit()
+
+
+@settings(deadline=None, max_examples=12)
+@given(seed=st.integers(0, 9999), n_slots=st.integers(1, 3),
+       num_pages=st.integers(4, 12), nreq=st.integers(1, 10),
+       max_queue=st.integers(0, 3))
+def test_scheduler_liveness_property(seed, n_slots, num_pages, nreq,
+                                     max_queue):
+    """Random arrival/completion/failure schedules: the scheduler always
+    drains, no admitted request deadlocks, quarantine-eviction leaks no
+    pages, and admission is FIFO among never-shed requests."""
+    rng = np.random.RandomState(seed)
+    al = K.PageAllocator(num_pages)
+    clock = {"t": 0.0}
+    sched = Scheduler(
+        n_slots, page_size=4, blocks_per_seq=3, allocator=al,
+        clock=lambda: clock["t"], max_queue=max_queue,
+        backoff=BackoffPolicy(base=2.0, factor=2.0, cap=8.0,
+                              max_attempts=2, jitter=0.5),
+    )
+    pending = []
+    for r in range(nreq):
+        plen = int(rng.randint(1, 7))
+        gen = int(rng.randint(1, 13 - plen))
+        dl = float(rng.randint(8, 40)) if rng.rand() < 0.3 else None
+        pending.append(Request(rid=r, prompt=[1] * plen, max_new=gen,
+                               deadline=dl))
+    admit_order, shed_rids = [], set()
+    steps = 0
+    while pending or sched.has_work():
+        while pending and rng.rand() < 0.7:
+            sched.submit(pending.pop(0))
+        for _i, s in sched.admit():
+            admit_order.append(s.req.rid)
+        shed_rids |= {q.req.rid for q in sched.backoff}
+        sched.expire_active(stall_patience=6)
+        for i, slot in sched.active():
+            if rng.rand() < 0.08:
+                sched.evict(i, "quarantined")
+            elif rng.rand() < 0.8:
+                slot.out.append(0)
+                slot.last_progress = sched.decode_steps + 1
+        sched.decode_steps += 1
+        clock["t"] = float(sched.decode_steps)
+        sched.retire_finished()
+        if not sched.active() and not sched.waiting and sched.backoff:
+            sched.force_readmit()
+        steps += 1
+        assert steps < 200 + 60 * nreq, (
+            f"liveness violated: {len(sched.results)}/{nreq} terminal after "
+            f"{steps} steps (waiting={len(sched.waiting)} "
+            f"backoff={len(sched.backoff)})"
+        )
+    assert set(sched.results) == set(range(nreq))  # every request terminal
+    assert all(rr.kind in ("ok", "quarantined", "stalled", "deadline",
+                           "queue_timeout", "shed")
+               for rr in sched.results.values())
+    assert al.n_free == num_pages  # no page leak through any path
+    fifo = [r for r in admit_order if r not in shed_rids]
+    assert fifo == sorted(fifo)  # FIFO fairness among never-shed requests
+
+
+# ---------------------------------------------------------------------------
+# Decode guard on a real model: retry, quarantine, healthy-slot identity
+# ---------------------------------------------------------------------------
+
+
+def test_guard_clean_run_identical():
+    cfg, params = arch("gemma-2b")
+    reqs = mk_reqs(5)
+    base = mk_engine(cfg, params).run([Request(**vars(r)) for r in reqs])
+    guarded_eng = mk_engine(cfg, params, guard=True)
+    guarded = guarded_eng.run(reqs)
+    assert guarded == base  # guard off/on: bit-identical without faults
+    assert guarded_eng.sched.stats.get("guard_retries", 0) == 0
+    assert all(rr.ok for rr in guarded_eng.results().values())
+
+
+def test_nan_logits_quarantine_healthy_bit_identical():
+    cfg, params = arch("gemma-2b")
+    spec = faults.FaultSpec.parse("nan_logits@2:slot=1")
+    clean = mk_engine(cfg, params, guard=True).run(mk_reqs(5))
+    eng = mk_engine(cfg, params, guard=True, guard_retries=2,
+                    fault_spec=spec)
+    events = []
+    out = eng.run(mk_reqs(5), events=events)
+    res = eng.results()
+    assert res[1].kind == "quarantined"
+    assert len(res[1].tokens) == 3  # prefill token + waves 0 and 1
+    assert eng.sched.stats["guard_retries"] == 2  # both re-keyed retries
+    assert ("evict:quarantined", 1, 1, 2) in events
+    healthy = {rid for rid, rr in res.items() if rr.ok}
+    assert healthy == {0, 2, 3, 4}
+    for rid in healthy:
+        assert out[rid] == clean[rid]  # healthy slots bit-identical
+    assert eng.allocator.n_free == eng.pc.num_pages  # no page leak
+
+
+def test_transient_failure_recovers_on_rekeyed_retry():
+    cfg, params = arch("gemma-2b")
+    eng = mk_engine(cfg, params, guard=True)
+    orig = eng._invoke_decode
+    state = {"fired": False}
+
+    def flaky(token, pos, pt, keys, attempt=0):
+        nxt, ok = orig(token, pos, pt, keys, attempt)
+        if eng.sched.decode_steps == 2 and attempt == 0 and not state["fired"]:
+            state["fired"] = True
+            ok = np.array(ok)
+            ok[1] = False  # one transient rejection for slot 1
+        return nxt, ok
+
+    eng._invoke_decode = flaky
+    out = eng.run(mk_reqs(3))
+    assert state["fired"]
+    assert eng.sched.stats["guard_retries"] == 1
+    assert all(rr.ok for rr in eng.results().values())
+    assert all(len(out[r]) == 6 for r in out)  # full budgets, no eviction
+
+
+def test_page_corrupt_drives_quarantine():
+    cfg, params = arch("gemma-2b")
+    clean = mk_engine(cfg, params, guard=True).run(mk_reqs(4))
+    spec = faults.FaultSpec.parse("page_corrupt@2:slot=0")
+    eng = mk_engine(cfg, params, guard=True, fault_spec=spec)
+    out = eng.run(mk_reqs(4))
+    res = eng.results()
+    # a NaN-scribbled page is persistent: re-keyed retries cannot fix
+    # storage corruption, so the slot quarantines
+    assert res[0].kind == "quarantined"
+    for rid, rr in res.items():
+        if rr.ok:
+            assert out[rid] == clean[rid]
+    assert eng.allocator.n_free == eng.pc.num_pages
+
+
+def test_request_stall_and_slot_drop():
+    cfg, params = arch("gemma-2b")
+    spec = faults.FaultSpec.parse("request_stall@1:slot=1")
+    eng = mk_engine(cfg, params, guard=True, fault_spec=spec,
+                    stall_patience=2)
+    events = []
+    eng.run(mk_reqs(3), events=events)
+    res = eng.results()
+    assert res[1].kind == "stalled"
+    assert {rid for rid, rr in res.items() if rr.ok} == {0, 2}
+    assert any(k == "fault:stall" for k, *_ in events)
+    assert eng.allocator.n_free == eng.pc.num_pages
+
+    spec = faults.FaultSpec.parse("slot_drop@2")
+    eng = mk_engine(cfg, params, guard=True, fault_spec=spec)
+    eng.run(mk_reqs(4))
+    res = eng.results()
+    dropped = {rid for rid, rr in res.items() if rr.kind == "dropped"}
+    assert dropped == {0, 1, 2}  # everything active at wave 2
+    assert res[3].ok  # admitted into the freed slots afterwards
+    assert eng.allocator.n_free == eng.pc.num_pages
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe snapshots: round-trip, torn-walk-back, fingerprint refusal
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_restore_resumes_from_committed(tmp_path):
+    cfg, params = arch("gemma-2b")
+    d = str(tmp_path / "snap")
+    reqs = mk_reqs(5)
+    full = mk_engine(cfg, params, guard=True).run(mk_reqs(5))
+    eng_a = mk_engine(cfg, params, guard=True, snapshot_dir=d,
+                      snapshot_every=2)
+    eng_a.run(reqs, _stop_after=4)  # dies after wave 4; snapshots at 2, 4
+    meta = checkpointing.read_meta(d, 4)
+    committed = {s["rid"]: list(s["out"])
+                 for s in meta["extra"]["slots"] if s is not None}
+    assert committed and all(len(c) == 5 for c in committed.values())
+
+    eng_b = mk_engine(cfg, params, guard=True)
+    info = eng_b.restore_serve(d)
+    assert info["step"] == 4 and info["in_flight"] == len(committed)
+    out = eng_b.run([])
+    assert set(out) == {r.rid for r in reqs}
+    for rid, toks in out.items():
+        assert len(toks) == 6  # full budget after resume
+        if rid in committed:  # continues FROM the last committed token
+            assert toks[:len(committed[rid])] == committed[rid]
+    assert out == full or all(
+        out[r][:len(committed.get(r, []))] == committed.get(r, [])
+        for r in out
+    )
+    assert eng_b.allocator.n_free == eng_b.pc.num_pages
+
+
+def test_snapshot_walks_back_past_torn_write(tmp_path):
+    cfg, params = arch("gemma-2b")
+    d = str(tmp_path / "snap")
+    spec = faults.FaultSpec.parse("ckpt_truncate@4")
+    eng_a = mk_engine(cfg, params, guard=True, snapshot_dir=d,
+                      snapshot_every=2, fault_spec=spec)
+    eng_a.run(mk_reqs(5), _stop_after=4)
+    eng_b = mk_engine(cfg, params)
+    info = eng_b.restore_serve(d)
+    assert info["step"] == 2  # torn step-4 npz: fell back to step 2
+    out = eng_b.run([])
+    assert set(out) == set(range(5))
+    assert all(len(t) == 6 for t in out.values())
+
+
+def test_snapshot_fingerprint_refusal(tmp_path):
+    cfg, params = arch("gemma-2b")
+    d = str(tmp_path / "snap")
+    eng_a = mk_engine(cfg, params, guard=True, snapshot_dir=d,
+                      snapshot_every=2)
+    eng_a.run(mk_reqs(4), _stop_after=2)
+    other = mk_engine(cfg, params, seed=7)
+    with pytest.raises(checkpointing.CheckpointStructureError,
+                       match="fingerprint"):
+        other.restore_serve(d)
+    # a non-snapshot checkpoint dir is refused with a structure error too
+    d2 = str(tmp_path / "train_ckpt")
+    checkpointing.save(d2, 0, {"params": {"w": jnp.zeros((2,))}})
+    with pytest.raises(checkpointing.CheckpointError):
+        mk_engine(cfg, params).restore_serve(d2)
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py --requests workload parser (the bugfix)
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp_path, text):
+    p = tmp_path / "wl.txt"
+    p.write_text(text)
+    return str(p)
+
+
+def test_workload_file_parser(tmp_path, capsys):
+    from types import SimpleNamespace
+
+    from repro.launch.serve import _parse_workload_file
+
+    cfg = SimpleNamespace(vocab_size=100)
+    reqs = _parse_workload_file(
+        _write(tmp_path, "# comment\n1,2,3|4\n\n5 6|2|30\n"), cfg)
+    assert [(r.rid, r.prompt, r.max_new, r.deadline) for r in reqs] == [
+        (0, [1, 2, 3], 4, None), (1, [5, 6], 2, 30.0),
+    ]
+    for bad, why in [
+        ("no pipes here", "2 or 3 '|'-separated"),
+        ("1,foo|3", "must be integers"),
+        ("|3", "empty prompt"),
+        ("999|3", "outside vocab"),
+        ("1,2|zero", "must be an integer"),
+        ("1,2|0", "max_new must be >= 1"),
+        ("1|2|soon", "must be a number"),
+        ("", "contains no requests"),
+    ]:
+        with pytest.raises(SystemExit) as e:
+            _parse_workload_file(_write(tmp_path, bad + "\n"), cfg)
+        assert e.value.code == 2  # pointed usage error, not a traceback
+        assert why in capsys.readouterr().err
